@@ -1,0 +1,56 @@
+"""Paper Fig. 9 — normalized operation breakdown with and without TrIMS.
+
+Without TrIMS an average of ~86% of end-to-end time is loading/init and ~7%
+compute; with TrIMS loading vanishes and the residual is compute + sharing
+overhead. Uses the full 37-model zoo.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import BenchEnv, geomean, modeled_timeline, write_csv
+from repro.core import ModelKey, cold_load
+
+
+def run(env: BenchEnv | None = None, verbose=True):
+    env = env or BenchEnv()
+    mrm = env.make_mrm(device_frac=4.0)
+    rows = []
+    for name, spec in env.specs.items():
+        key = ModelKey("repro-jax", name, "1")
+        base = cold_load(env.disk, key)
+        t_cold = modeled_timeline(spec, base.timings, env.hw, warm=False, upscale=1/env.scale)
+        h1 = mrm.open(key)
+        h2 = mrm.open(key)  # device hit
+        t_hit = modeled_timeline(spec, h2.timings, env.hw, warm=True, upscale=1/env.scale)
+        denom = t_cold.total
+        rows.append({
+            "model": name,
+            "no_trims": {
+                "load": (t_cold.disk_s + t_cold.deserialize_s) / denom,
+                "init": t_cold.h2d_s / denom,
+                "compute": t_cold.compute_s / denom,
+            },
+            "trims": {
+                "share": t_hit.share_s / denom,
+                "compute": t_hit.compute_s / denom,
+                "total": t_hit.total / denom,
+            },
+            "speedup": denom / t_hit.total,
+        })
+        mrm.close(h1)
+        mrm.close(h2)
+    write_csv("fig9_breakdown", rows)
+    load_frac = float(np.mean([r["no_trims"]["load"] + r["no_trims"]["init"]
+                               for r in rows]))
+    comp_frac = float(np.mean([r["no_trims"]["compute"] for r in rows]))
+    gm = geomean([r["speedup"] for r in rows])
+    if verbose:
+        print(f"  without TrIMS: load+init {100*load_frac:.0f}% of time, "
+              f"compute {100*comp_frac:.0f}%")
+        print(f"  with TrIMS: geomean speedup {gm:.1f}x over 37 models")
+    return rows, load_frac, comp_frac, gm
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,54 @@
+"""Paper Fig. 1 — cold-start inference time breakdown.
+
+For each proxy model: fraction of end-to-end cold latency spent in model
+loading (disk read + deserialization), device placement, and inference
+compute — measured on this host and on the modeled TPU timeline. The paper's
+claim: loading dominates everything except the smallest models.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import (BenchEnv, Timeline, geomean, measured_timeline,
+                               modeled_timeline, write_csv)
+from repro.core import ModelKey, cold_load
+from repro.core.proxyzoo import proxy_forward
+
+REPRESENTATIVE = ["AlexNet", "GoogLeNet", "SqueezeNet-v1.0", "VGG16",
+                  "ResNet50", "ResNet152", "Inception-v3", "WRN50-v2"]
+
+
+def run(env: BenchEnv | None = None, models=None, verbose=True):
+    env = env or BenchEnv()
+    rows = []
+    x = np.random.default_rng(0).standard_normal((1, 64)).astype(np.float32)
+    for name in (models or REPRESENTATIVE):
+        spec = env.specs[name]
+        key = ModelKey("repro-jax", name, "1")
+        m = cold_load(env.disk, key)
+        t0 = time.perf_counter()
+        proxy_forward(m.weights, x)
+        compute_meas = time.perf_counter() - t0
+        meas = measured_timeline(spec, m.timings, compute_meas, warm=False)
+        mod = modeled_timeline(spec, m.timings, env.hw, warm=False, upscale=1/env.scale)
+        rows.append({
+            "model": name, "mwmf_bytes": spec.mwmf_bytes,
+            "measured": meas.__dict__, "modeled": mod.__dict__,
+            "measured_load_frac": meas.load_fraction(),
+            "modeled_load_frac": mod.load_fraction(),
+        })
+        if verbose:
+            print(f"  {name:<20} size={spec.mwmf_bytes/2**20:7.1f}MB "
+                  f"load_frac measured={meas.load_fraction():.2f} "
+                  f"modeled(TPU)={mod.load_fraction():.2f}")
+    write_csv("fig1_coldstart", rows)
+    med = float(np.median([r["modeled_load_frac"] for r in rows
+                           if r["model"] != "SqueezeNet-v1.0"]))
+    return rows, med
+
+
+if __name__ == "__main__":
+    _, med = run()
+    print(f"median modeled load fraction (non-tiny models): {med:.2f}")

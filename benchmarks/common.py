@@ -1,0 +1,168 @@
+"""Shared benchmark harness utilities.
+
+Every benchmark reports TWO timelines per measurement:
+  * measured — real seconds on this host (real file I/O, real deserialize,
+    real shm/ipc overhead, jnp staging, CPU compute)
+  * modeled  — the TPU v5e serving timeline: measured disk/deserialize terms
+    + H2D at 32 GB/s + compute at the roofline-derived rate (paper Table 2
+    methodology: per-system constants x measured I/O)
+
+Paper-comparable speedups come from the modeled timeline; the measured one
+proves the mechanism (shared vs private copies) on real hardware.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+import time
+from contextlib import contextmanager
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+from repro.core import (CloudStore, DiskStore, HardwareModel, MRM,
+                        ModelKey, get_hardware)
+from repro.core.proxyzoo import (ProxySpec, large_specs, populate_store,
+                                 proxy_flops, small_specs)
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "artifacts")
+DEFAULT_SCALE = float(os.environ.get("TRIMS_BENCH_SCALE", "0.03"))
+MRM_COMPUTE_EFF = 0.45   # assumed fraction of v5e peak for proxy inference
+CONV_WEIGHT_REUSE = 60.0  # CNN spatial reuse: FLOPs ~= 2 * params * reuse
+                          # (ResNet50: 4.1GF/25.6M=80, VGG16: 15.5GF/138M=56,
+                          #  Inception-v3: 5.7GF/24M=119; 60 = class median)
+DISPATCH_FLOOR_S = 1e-3   # per-request runtime dispatch/feed floor (both
+                          # warm and cold paths pay it)
+
+
+@dataclass
+class Timeline:
+    """One end-to-end inference latency decomposition (seconds)."""
+    disk_s: float = 0.0
+    deserialize_s: float = 0.0
+    h2d_s: float = 0.0
+    share_s: float = 0.0
+    compute_s: float = 0.0
+    init_s: float = 0.0
+
+    @property
+    def total(self) -> float:
+        return (self.disk_s + self.deserialize_s + self.h2d_s + self.share_s
+                + self.compute_s + self.init_s)
+
+    def load_fraction(self) -> float:
+        t = self.total
+        return 0.0 if t == 0 else (t - self.compute_s) / t
+
+
+def modeled_compute_s(spec: ProxySpec, hw: HardwareModel) -> float:
+    """Batch-1 CNN-class inference: max of the HBM term (weights stream once)
+    and the MXU term with CONV_WEIGHT_REUSE FLOPs per weight."""
+    hbm = spec.mwmf_bytes / hw.hbm_bw
+    mxu = (proxy_flops(spec) * CONV_WEIGHT_REUSE
+           / (hw.peak_flops * MRM_COMPUTE_EFF))
+    return max(hbm, mxu)
+
+
+def modeled_timeline(spec: ProxySpec, timings, hw: HardwareModel,
+                     warm: bool, upscale: float = 1.0) -> Timeline:
+    """TPU timeline from a core.mrm.OpenTimings + the proxy's compute model.
+
+    ``upscale`` linearly extrapolates the byte-proportional terms (disk,
+    deserialize, H2D, compute) from the scaled proxy files back to the
+    paper's full model sizes; the per-object sharing overhead does NOT
+    scale — that asymmetry is exactly the rho = b/q - n(o+s) trade."""
+    t = Timeline(compute_s=modeled_compute_s(spec, hw) * upscale,
+                 init_s=DISPATCH_FLOOR_S)
+    if warm:
+        t.share_s = timings.share_overhead_s
+    else:
+        t.disk_s = (timings.disk_read_s + timings.cloud_s) * upscale
+        t.deserialize_s = timings.deserialize_s * upscale
+        t.h2d_s = timings.h2d_modeled_s * upscale
+        t.share_s = timings.share_overhead_s
+    return t
+
+
+def analytic_timeline(spec: ProxySpec, hw: HardwareModel, tier_hit: str,
+                      share_s: float, upscale: float = 1.0) -> Timeline:
+    """Fully-modeled timeline (no measured jitter) — used where thousands of
+    requests would otherwise amplify page-cache variance (Fig. 11)."""
+    full = int(spec.mwmf_bytes * upscale)
+    t = Timeline(compute_s=modeled_compute_s(spec, hw) * upscale,
+                 init_s=DISPATCH_FLOOR_S, share_s=share_s)
+    if tier_hit == "device":
+        return t
+    t.h2d_s = hw.h2d_time(full)
+    if tier_hit == "host":
+        return t
+    t.disk_s = hw.disk_time(full)
+    t.deserialize_s = full / hw.cached_read_bw  # unmarshal ~ memcpy-bound
+    if tier_hit == "cloud":
+        t.disk_s += hw.cloud_time(full)
+    return t
+
+
+def measured_timeline(spec: ProxySpec, timings, compute_s: float,
+                      warm: bool) -> Timeline:
+    t = Timeline(compute_s=compute_s)
+    if warm:
+        t.share_s = timings.share_overhead_s
+    else:
+        t.disk_s = timings.disk_read_s + timings.cloud_s
+        t.deserialize_s = timings.deserialize_s
+        t.h2d_s = timings.h2d_measured_s
+        t.share_s = timings.share_overhead_s
+    return t
+
+
+class BenchEnv:
+    """Disk + cloud stores populated with the paper's proxy zoo."""
+
+    def __init__(self, root: Optional[str] = None, scale: float = DEFAULT_SCALE,
+                 include_large: bool = False, large_scale: Optional[float] = None):
+        self.root = root or tempfile.mkdtemp(prefix="trims_bench_")
+        self._owned = root is None
+        self.scale = scale
+        self.hw = get_hardware()
+        self.disk = DiskStore(os.path.join(self.root, "disk"))
+        self.cloud = CloudStore(os.path.join(self.root, "cloud"),
+                                simulate_time=False)
+        self.small = small_specs(scale)
+        self.keys = populate_store(self.disk, self.small)
+        self.large: List[ProxySpec] = []
+        if include_large:
+            self.large = large_specs(large_scale if large_scale is not None
+                                     else scale)
+            self.keys.update(populate_store(self.disk, self.large))
+        self.specs = {s.name: s for s in self.small + self.large}
+
+    def make_mrm(self, device_frac: float = 2.0, policy: str = "lru",
+                 **kw) -> MRM:
+        """device_frac = device capacity as a multiple of total footprint
+        (paper Fig. 11 oversubscription: total = 2x device capacity
+        => device_frac = 0.5)."""
+        total = sum(s.mwmf_bytes for s in self.specs.values())
+        return MRM(self.disk, self.cloud,
+                   device_capacity=max(1 << 20, int(total * device_frac)),
+                   host_capacity=max(1 << 22, int(total * 4)),
+                   policy=policy, hw=self.hw, **kw)
+
+    def cleanup(self):
+        if self._owned:
+            shutil.rmtree(self.root, ignore_errors=True)
+
+
+def write_csv(name: str, rows: List[dict], derived: str = "") -> str:
+    os.makedirs(ART_DIR, exist_ok=True)
+    path = os.path.join(ART_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(rows, f, indent=1)
+    return path
+
+
+def geomean(xs) -> float:
+    import math
+    xs = [max(x, 1e-12) for x in xs]
+    return math.exp(sum(math.log(x) for x in xs) / len(xs))

@@ -1,0 +1,120 @@
+"""Roofline analysis from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape) single-pod cell:
+  compute term    = HLO_dot_FLOPs(per chip) / peak_FLOP/s
+  memory term     = HLO_traffic_bytes(per chip) / HBM_bw
+  collective term = collective_bytes(per chip, ring model) / ICI link bw
+  MODEL_FLOPS     = 6 * N(_active) * tokens (train) | 2 * N * tokens (fwd)
+  usefulness      = MODEL_FLOPS_per_chip / HLO_FLOPs (remat/redundancy waste)
+
+The dominant term is the bottleneck the §Perf loop iterates on.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+from repro.configs import SHAPES_BY_NAME, get_config
+from repro.core.costmodel import HBM_BW, ICI_BW_PER_LINK, PEAK_FLOPS_BF16
+
+ART = os.path.join(os.path.dirname(__file__), "artifacts", "dryrun")
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    cfg = get_config(arch)
+    shape = SHAPES_BY_NAME[shape_name]
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch  # decode: one token per sequence
+
+
+def load_cells(multi_pod: bool = False) -> List[dict]:
+    cells = []
+    suffix = ".mp.json" if multi_pod else ".sp.json"
+    for path in sorted(glob.glob(os.path.join(ART, f"*{suffix}"))):
+        rec = json.load(open(path))
+        if not rec.get("ok") or rec.get("skipped"):
+            continue
+        cells.append(rec)
+    return cells
+
+
+def roofline_row(rec: dict) -> Optional[dict]:
+    h = rec["hlo_analysis"]
+    pd = rec["per_device"]
+    chips = rec["chips"]
+    staging_t = pd.get("staging_traffic_bytes", 0.0)
+    traffic = max(h["traffic_bytes"] - staging_t, pd["argument_bytes"])
+    t_comp = h["dot_flops"] / PEAK_FLOPS_BF16
+    t_mem = traffic / HBM_BW
+    t_coll = h["total_coll_bytes"] / ICI_BW_PER_LINK
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    dom = max(terms, key=terms.get)
+    mf = model_flops(rec["arch"], rec["shape"]) / chips
+    bound = max(t_comp, t_mem, t_coll)
+    ideal = mf / PEAK_FLOPS_BF16
+    row = {
+        "arch": rec["arch"], "shape": rec["shape"], "chips": chips,
+        "compute_s": t_comp, "memory_s": t_mem, "collective_s": t_coll,
+        "dominant": dom,
+        "model_flops_per_chip": mf,
+        "hlo_flops_per_chip": h["dot_flops"],
+        "usefulness": mf / h["dot_flops"] if h["dot_flops"] else 0.0,
+        "roofline_fraction": ideal / bound if bound else 0.0,
+        "peak_hbm_gib": pd.get("peak_hbm_bytes_tpu",
+                               pd["peak_hbm_bytes"]) / 2 ** 30,
+        "coll_breakdown": h["coll_bytes"],
+        "compile_s": rec["compile_s"],
+    }
+    if rec["kind"] == "decode":
+        # decode is bandwidth-bound by construction: compare achieved traffic
+        # against the one-pass floor (params + cache read once)
+        row["bandwidth_fraction"] = pd["argument_bytes"] / max(traffic, 1)
+        row["roofline_fraction"] = row["bandwidth_fraction"]
+    return row
+
+
+def table(multi_pod: bool = False) -> List[dict]:
+    return [r for r in (roofline_row(c) for c in load_cells(multi_pod)) if r]
+
+
+def render_markdown(rows: List[dict]) -> str:
+    hdr = ("| arch | shape | compute s | memory s | collective s | dominant | "
+           "MODEL/HLO flops | roofline frac | peak HBM GiB |\n"
+           "|---|---|---|---|---|---|---|---|---|\n")
+    lines = []
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3e} | "
+            f"{r['memory_s']:.3e} | {r['collective_s']:.3e} | "
+            f"{r['dominant']} | {r['usefulness']:.2f} | "
+            f"{r['roofline_fraction']:.3f} | {r['peak_hbm_gib']:.2f} |")
+    return hdr + "\n".join(lines)
+
+
+def main():
+    rows = table(multi_pod=False)
+    print(render_markdown(rows))
+    out = os.path.join(os.path.dirname(ART), "roofline_sp.json")
+    with open(out, "w") as f:
+        json.dump(rows, f, indent=1)
+    # hillclimb candidates
+    worst = min(rows, key=lambda r: r["roofline_fraction"])
+    coll = max(rows, key=lambda r: r["collective_s"] /
+               max(r["compute_s"] + r["memory_s"], 1e-12))
+    print(f"\nworst roofline fraction: {worst['arch']}.{worst['shape']} "
+          f"({worst['roofline_fraction']:.4f})")
+    print(f"most collective-bound:   {coll['arch']}.{coll['shape']} "
+          f"(coll {coll['collective_s']:.2e}s vs comp+mem "
+          f"{coll['compute_s']+coll['memory_s']:.2e}s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,104 @@
+"""Benchmark entry point: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines. ``us_per_call`` is the
+benchmark's primary latency (modeled TPU timeline, see common.py);
+``derived`` is the figure's headline quantity.
+
+  PYTHONPATH=src python -m benchmarks.run [--full] [--skip-serving]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from benchmarks.common import BenchEnv, geomean
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="full-size proxy files (slow; default 3%% scale)")
+    ap.add_argument("--skip-serving", action="store_true")
+    ap.add_argument("--skip-roofline", action="store_true")
+    args = ap.parse_args()
+
+    scale = 1.0 if args.full else None
+    env = BenchEnv(scale=scale) if scale else BenchEnv()
+    env_large = BenchEnv(include_large=True,
+                         scale=env.scale, large_scale=env.scale)
+    out = []
+
+    print("== Fig 1: cold-start breakdown ==", flush=True)
+    from benchmarks import bench_coldstart
+    rows, med = bench_coldstart.run(env, verbose=True)
+    cold_us = 1e6 * sum(r["modeled"]["disk_s"] + r["modeled"]["deserialize_s"]
+                        + r["modeled"]["h2d_s"] + r["modeled"]["compute_s"]
+                        + r["modeled"]["init_s"] for r in rows) / len(rows)
+    out.append(("fig1_coldstart", cold_us, f"median_load_frac={med:.3f}"))
+
+    print("== Fig 8: best/worst case latency ==", flush=True)
+    from benchmarks import bench_latency
+    rows = bench_latency.run(env, verbose=True)
+    gm = geomean([r["speedup_best"] for r in rows])
+    hit_us = 1e6 * sum(r["hit_s"] for r in rows) / len(rows)
+    out.append(("fig8_latency", hit_us,
+                f"geomean_best={gm:.1f}x;max_best={max(r['speedup_best'] for r in rows):.1f}x;"
+                f"pct_ideal={100*geomean([r['pct_of_ideal'] for r in rows]):.1f}%"))
+
+    print("== Fig 9: breakdown w/ and w/o TrIMS ==", flush=True)
+    from benchmarks import bench_breakdown
+    rows9, load_frac, comp_frac, gm9 = bench_breakdown.run(env, verbose=True)
+    out.append(("fig9_breakdown", 1e6 * load_frac,
+                f"load_frac={load_frac:.2f};compute_frac={comp_frac:.2f};"
+                f"geomean_speedup={gm9:.1f}x"))
+
+    print("== Fig 10: large models ==", flush=True)
+    from benchmarks import bench_large
+    rows10, concurrent_ok = bench_large.run(env_large, verbose=True)
+    out.append(("fig10_large", 1e6 * sum(r["hit_s"] for r in rows10) / len(rows10),
+                f"max_speedup={max(r['speedup_best'] for r in rows10):.1f}x;"
+                f"concurrent_share={concurrent_ok}"))
+
+    print("== Fig 11: workload modeling ==", flush=True)
+    from benchmarks import bench_workload
+    rows11, best = bench_workload.run(env, verbose=True)
+    out.append(("fig11_workload", 0.0, f"max_batch_speedup={best:.1f}x"))
+
+    print("== ablations: eviction policy + rho granularity ==", flush=True)
+    from benchmarks import bench_ablation
+    rows_a, spread = bench_ablation.eviction_ablation(env, verbose=True)
+    bench_ablation.granularity_ablation(verbose=True)
+    out.append(("ablation_eviction", 0.0,
+                f"hit_rate_spread={spread:.3f};policies=lru,lcu,fifo,largest"))
+
+    if not args.skip_serving:
+        print("== end-to-end serving (live models) ==", flush=True)
+        from benchmarks import bench_serving
+        rows_s, speedups = bench_serving.run(verbose=True)
+        warm = [r for r in rows_s if r["trims"] and r["request"] > 0]
+        out.append(("serving_e2e",
+                    1e6 * sum(r["model_load_s"] for r in warm) / max(1, len(warm)),
+                    ";".join(f"{a}={s:.0f}x" for a, s in speedups.items())))
+
+    if not args.skip_roofline:
+        print("== roofline (from dry-run artifacts) ==", flush=True)
+        try:
+            from benchmarks import roofline
+            rows_r = roofline.table(multi_pod=False)
+            if rows_r:
+                frac = geomean([max(r["roofline_fraction"], 1e-4) for r in rows_r])
+                out.append(("roofline", 0.0,
+                            f"cells={len(rows_r)};geomean_fraction={frac:.3f}"))
+        except Exception as e:  # noqa: BLE001
+            print(f"  roofline skipped: {e}")
+
+    print("\nname,us_per_call,derived")
+    for name, us, derived in out:
+        print(f"{name},{us:.1f},{derived}")
+    env.cleanup()
+    env_large.cleanup()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+"""repro: TrIMS (Transparent & Isolated Model Sharing) on a JAX/TPU stack.
+
+Layers:
+  repro.core      — the paper's contribution (MRM, tiered model cache, FaaS)
+  repro.models    — pure-JAX 10-arch model zoo
+  repro.serving   — inference engine wired through TrIMS
+  repro.kernels   — Pallas TPU kernels + jnp oracles
+  repro.launch    — mesh / dry-run / train / serve entry points
+"""
+
+__version__ = "1.0.0"

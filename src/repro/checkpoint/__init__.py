@@ -1,0 +1,4 @@
+from repro.checkpoint.checkpoint import (  # noqa: F401
+    latest_step, restore_checkpoint, retain, save_checkpoint,
+)
+from repro.checkpoint.manager import CheckpointManager  # noqa: F401

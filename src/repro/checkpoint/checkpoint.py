@@ -1,0 +1,161 @@
+"""Mesh-agnostic checkpointing.
+
+Checkpoints store LOGICAL arrays (the .trims container from core/store —
+same format the MRM serves, so a training checkpoint is directly loadable
+by the serving tier). Restore re-shards onto whatever mesh the restarted
+job has — elastic scaling across restarts: save on (16,16), resume on
+(2,16,16) or a single CPU device.
+
+Layout:
+  <dir>/step_000123/state.trims   tensors named by tree path
+  <dir>/step_000123/META.json     step, timestamp, config name
+  <dir>/LATEST                    text file with the newest step dir
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import time
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.store import ModelFile, write_model
+
+SEP = "/"
+
+
+def _flatten(tree) -> Dict[str, Any]:
+    flat = {}
+
+    def walk(prefix, node):
+        if isinstance(node, dict):
+            for k in sorted(node):
+                walk(f"{prefix}{SEP}{k}" if prefix else str(k), node[k])
+        elif isinstance(node, (list, tuple)) and not hasattr(node, "shape"):
+            for i, v in enumerate(node):
+                walk(f"{prefix}{SEP}#{i}", v)
+        else:
+            flat[prefix] = node
+
+    walk("", tree)
+    return flat
+
+
+def _unflatten(flat: Dict[str, Any]):
+    root: Dict[str, Any] = {}
+    for path, v in flat.items():
+        keys = path.split(SEP)
+        node = root
+        for k in keys[:-1]:
+            node = node.setdefault(k, {})
+        node[keys[-1]] = v
+
+    def fix(node):
+        if isinstance(node, dict):
+            if node and all(k.startswith("#") for k in node):
+                return [fix(node[f"#{i}"]) for i in range(len(node))]
+            return {k: fix(v) for k, v in node.items()}
+        return node
+
+    return fix(root)
+
+
+def save_checkpoint(ckpt_dir: str, step: int, state: Dict[str, Any],
+                    meta: Optional[dict] = None) -> str:
+    """state: {"params": tree, "mu": tree, "nu": tree, "step": array, ...}."""
+    flat = _flatten(state)
+    host = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = d + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+    write_model(os.path.join(tmp, "state.trims"), host,
+                meta={"step": step, **(meta or {})})
+    with open(os.path.join(tmp, "META.json"), "w") as f:
+        json.dump({"step": step, "time": time.time(), **(meta or {})}, f)
+    if os.path.exists(d):
+        shutil.rmtree(d)
+    os.replace(tmp, d)
+    with open(os.path.join(ckpt_dir, "LATEST.tmp"), "w") as f:
+        f.write(os.path.basename(d))
+    os.replace(os.path.join(ckpt_dir, "LATEST.tmp"),
+               os.path.join(ckpt_dir, "LATEST"))
+    return d
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    latest = os.path.join(ckpt_dir, "LATEST")
+    if not os.path.exists(latest):
+        return None
+    with open(latest) as f:
+        name = f.read().strip()
+    if not os.path.isdir(os.path.join(ckpt_dir, name)):
+        return None
+    return int(name.split("_")[1])
+
+
+def restore_checkpoint(ckpt_dir: str, step: Optional[int] = None,
+                       shardings=None) -> Tuple[int, Dict[str, Any]]:
+    """Re-shards every leaf onto ``shardings`` (same tree structure) if
+    given; otherwise returns host numpy arrays."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    mf = ModelFile(os.path.join(d, "state.trims"))
+    flat = mf.read_all()
+    state = _unflatten(flat)
+    if shardings is not None:
+        flat_sh = _flatten(shardings)
+
+        def place(path, arr):
+            sh = flat_sh.get(path)
+            if sh is None:
+                return jax.numpy.asarray(arr)
+            return jax.device_put(arr, sh)
+
+        state = _unflatten({k: place(k, v) for k, v in _flatten(state).items()})
+    return step, state
+
+
+def restore_into(template, ckpt_dir: str, step: Optional[int] = None,
+                 shardings=None) -> Tuple[int, Any]:
+    """Restore leaves into ``template``'s exact structure (robust to empty
+    subtrees — e.g. non-parametric norms — which a bare unflatten drops)."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    mf = ModelFile(os.path.join(d, "state.trims"))
+    flat = mf.read_all()
+    flat_sh = _flatten(shardings) if shardings is not None else {}
+
+    def fill(prefix, node):
+        if isinstance(node, dict):
+            return {k: fill(f"{prefix}{SEP}{k}" if prefix else str(k), v)
+                    for k, v in node.items()}
+        if isinstance(node, (list, tuple)) and not hasattr(node, "shape"):
+            return type(node)(fill(f"{prefix}{SEP}#{i}", v)
+                              for i, v in enumerate(node))
+        if prefix not in flat:
+            raise KeyError(f"checkpoint missing leaf {prefix!r}")
+        arr = flat[prefix]
+        sh = flat_sh.get(prefix)
+        return jax.device_put(arr, sh) if sh is not None else jax.numpy.asarray(arr)
+
+    return step, fill("", template)
+
+
+def retain(ckpt_dir: str, keep: int = 3):
+    steps = sorted(
+        int(n.split("_")[1]) for n in os.listdir(ckpt_dir)
+        if n.startswith("step_") and not n.endswith(".tmp"))
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:08d}"),
+                      ignore_errors=True)

@@ -1,0 +1,66 @@
+"""Async checkpoint manager: snapshot on the training thread (cheap
+device_get), serialize on a background thread so the step loop never blocks
+on disk; bounded queue applies back-pressure instead of unbounded RAM."""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint.checkpoint import retain, save_checkpoint
+
+
+class CheckpointManager:
+    def __init__(self, ckpt_dir: str, every: int = 100, keep: int = 3,
+                 async_mode: bool = True):
+        self.ckpt_dir = ckpt_dir
+        self.every = every
+        self.keep = keep
+        self.async_mode = async_mode
+        self._q: "queue.Queue" = queue.Queue(maxsize=1)
+        self._err: Optional[BaseException] = None
+        self.saved_steps = []
+        if async_mode:
+            self._thread = threading.Thread(target=self._worker, daemon=True)
+            self._thread.start()
+
+    def should_save(self, step: int) -> bool:
+        return step > 0 and step % self.every == 0
+
+    def save(self, step: int, state: Dict[str, Any], meta=None, force=False):
+        if not force and not self.should_save(step):
+            return
+        if self._err is not None:
+            raise self._err
+        # snapshot to host NOW (state may be donated/overwritten next step)
+        host = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), state)
+        if self.async_mode:
+            self._q.put((step, host, meta))  # back-pressure if one in flight
+        else:
+            self._write(step, host, meta)
+
+    def _worker(self):
+        while True:
+            item = self._q.get()
+            try:
+                if item is not None:
+                    self._write(*item)
+            except BaseException as e:  # noqa: BLE001
+                self._err = e
+            finally:
+                self._q.task_done()
+
+    def _write(self, step, host, meta):
+        save_checkpoint(self.ckpt_dir, step, host, meta)
+        self.saved_steps.append(step)
+        retain(self.ckpt_dir, self.keep)
+
+    def wait(self):
+        """Block until all queued saves hit disk."""
+        if self.async_mode:
+            self._q.join()
+        if self._err is not None:
+            raise self._err

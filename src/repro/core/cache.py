@@ -1,0 +1,181 @@
+"""Tier caches with pluggable eviction (paper §4.1.2).
+
+Invariants (property-tested):
+  * used_bytes == sum of resident entry sizes, always <= capacity after fit()
+  * entries with refcount > 0 are never eviction candidates
+  * eviction order follows the configured policy
+"""
+from __future__ import annotations
+
+import threading
+import time
+from abc import ABC, abstractmethod
+from dataclasses import dataclass, field
+from enum import Enum
+from typing import Dict, Hashable, List, Optional
+
+
+class Tier(Enum):
+    DEVICE = 0   # TPU HBM (GPU memory in the paper)
+    HOST = 1     # host DRAM (CPU memory)
+    DISK = 2     # local storage
+    REMOTE = 3   # cloud storage
+
+
+@dataclass
+class CacheEntry:
+    key: Hashable
+    nbytes: int
+    refcount: int = 0
+    pinned: bool = False
+    inserted_at: float = field(default_factory=time.monotonic)
+    last_used: float = field(default_factory=time.monotonic)
+    use_count: int = 0
+    payload: object = None  # tier-specific (device pytree / host buffers / path)
+
+    def touch(self):
+        self.last_used = time.monotonic()
+        self.use_count += 1
+
+
+class EvictionPolicy(ABC):
+    name = "base"
+
+    @abstractmethod
+    def order(self, entries: List[CacheEntry]) -> List[CacheEntry]:
+        """Victims-first ordering of evictable entries."""
+
+
+class LRU(EvictionPolicy):
+    name = "lru"
+
+    def order(self, entries):
+        return sorted(entries, key=lambda e: e.last_used)
+
+
+class LCU(EvictionPolicy):
+    """Least-commonly-used (paper's LCU)."""
+    name = "lcu"
+
+    def order(self, entries):
+        return sorted(entries, key=lambda e: (e.use_count, e.last_used))
+
+
+class FIFO(EvictionPolicy):
+    name = "fifo"
+
+    def order(self, entries):
+        return sorted(entries, key=lambda e: e.inserted_at)
+
+
+class Largest(EvictionPolicy):
+    """Evict the largest first — frees space with fewest evictions."""
+    name = "largest"
+
+    def order(self, entries):
+        return sorted(entries, key=lambda e: -e.nbytes)
+
+
+POLICIES = {p.name: p for p in (LRU(), LCU(), FIFO(), Largest())}
+
+
+class CapacityError(RuntimeError):
+    pass
+
+
+class TierCache:
+    """Byte-capacity cache for one tier. Thread-safe."""
+
+    def __init__(self, tier: Tier, capacity_bytes: int,
+                 policy: EvictionPolicy | str = "lru"):
+        self.tier = tier
+        self.capacity = int(capacity_bytes)
+        self.policy = POLICIES[policy] if isinstance(policy, str) else policy
+        self.entries: Dict[Hashable, CacheEntry] = {}
+        self.used = 0
+        self.lock = threading.RLock()
+        # metrics
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        self.bytes_evicted = 0
+
+    # -- queries ------------------------------------------------------------
+    def get(self, key) -> Optional[CacheEntry]:
+        with self.lock:
+            e = self.entries.get(key)
+            if e is not None:
+                self.hits += 1
+                e.touch()
+            else:
+                self.misses += 1
+            return e
+
+    def peek(self, key) -> Optional[CacheEntry]:
+        with self.lock:
+            return self.entries.get(key)
+
+    def free_bytes(self) -> int:
+        with self.lock:
+            return self.capacity - self.used
+
+    # -- mutation -----------------------------------------------------------
+    def make_room(self, nbytes: int) -> List[CacheEntry]:
+        """Evict unreferenced entries (policy order) until ``nbytes`` fits.
+
+        Returns the evicted entries (caller demotes/frees payloads).
+        Raises CapacityError if the bytes cannot fit even after evicting
+        everything evictable.
+        """
+        with self.lock:
+            if nbytes > self.capacity:
+                raise CapacityError(
+                    f"{self.tier.name}: object of {nbytes}B exceeds capacity {self.capacity}B")
+            evicted: List[CacheEntry] = []
+            if self.used + nbytes <= self.capacity:
+                return evicted
+            candidates = [e for e in self.entries.values()
+                          if e.refcount == 0 and not e.pinned]
+            for victim in self.policy.order(candidates):
+                if self.used + nbytes <= self.capacity:
+                    break
+                self._remove_locked(victim.key)
+                evicted.append(victim)
+                self.evictions += 1
+                self.bytes_evicted += victim.nbytes
+            if self.used + nbytes > self.capacity:
+                # roll forward is impossible; caller decides (all in use)
+                raise CapacityError(
+                    f"{self.tier.name}: cannot free {nbytes}B "
+                    f"({self.used}B used, all remaining entries referenced)")
+            return evicted
+
+    def insert(self, key, nbytes: int, payload=None, refcount: int = 0) -> CacheEntry:
+        with self.lock:
+            if key in self.entries:
+                raise KeyError(f"{key} already resident in {self.tier.name}")
+            if self.used + nbytes > self.capacity:
+                raise CapacityError(f"{self.tier.name}: insert without room")
+            e = CacheEntry(key=key, nbytes=nbytes, payload=payload, refcount=refcount)
+            self.entries[key] = e
+            self.used += nbytes
+            return e
+
+    def _remove_locked(self, key) -> CacheEntry:
+        e = self.entries.pop(key)
+        self.used -= e.nbytes
+        return e
+
+    def remove(self, key) -> CacheEntry:
+        with self.lock:
+            return self._remove_locked(key)
+
+    def stats(self) -> dict:
+        with self.lock:
+            return {
+                "tier": self.tier.name, "capacity": self.capacity,
+                "used": self.used, "n_entries": len(self.entries),
+                "hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions, "bytes_evicted": self.bytes_evicted,
+                "policy": self.policy.name,
+            }

@@ -1,0 +1,183 @@
+"""FaaS platform with container isolation (paper §3, §4.3).
+
+Users deploy *functions* (arbitrary Python callables over a context object);
+the platform provisions each into a :class:`Container` — an isolation context
+with its own namespace token, capability-scoped handle table and resource
+accounting. Functions reach models ONLY through ``ctx.load_model`` /
+``ctx.predict``; handles are container-scoped, so one tenant can never reach
+another tenant's handle (the paper's Docker-volume-plugin boundary, moved to
+the runtime layer per DESIGN.md §2).
+
+Multi-node (paper §4.2): :class:`Router` load-balances invocations across
+several platforms and prefers nodes already advertising the needed models.
+"""
+from __future__ import annotations
+
+import itertools
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.core.client import LoadedModel, TrimsClient, cold_load, free_model
+from repro.core.mrm import MRM, ModelKey
+
+
+class IsolationError(PermissionError):
+    pass
+
+
+@dataclass
+class Accounting:
+    invocations: int = 0
+    total_s: float = 0.0
+    model_load_s: float = 0.0
+    compute_s: float = 0.0
+    bytes_loaded: int = 0
+    cold_starts: int = 0
+    latencies: List[float] = field(default_factory=list)
+
+
+class Container:
+    """Isolation context for one deployed function."""
+
+    _ids = itertools.count(1)
+
+    def __init__(self, platform: "FaaSPlatform", fn_name: str,
+                 allowed_models: Optional[Sequence[Tuple[str, str]]] = None,
+                 use_trims: bool = True):
+        self.cid = f"c{next(self._ids)}"
+        self.platform = platform
+        self.fn_name = fn_name
+        self.allowed = set(allowed_models) if allowed_models is not None else None
+        self.use_trims = use_trims
+        self.acct = Accounting()
+        self._models: Dict[ModelKey, LoadedModel] = {}
+        self._trims = (TrimsClient(platform.mrm, client_id=self.cid)
+                       if platform.mrm is not None and use_trims else None)
+        self._lock = threading.RLock()
+
+    # -- the API surface user functions see --------------------------------
+    def load_model(self, framework: str, name: str, version: str = "1") -> LoadedModel:
+        key = ModelKey(framework, name, version)
+        if self.allowed is not None and (framework, name) not in self.allowed:
+            raise IsolationError(
+                f"{self.cid}: function {self.fn_name!r} is not entitled to {key}")
+        with self._lock:
+            if key in self._models:
+                return self._models[key]
+            t0 = time.perf_counter()
+            if self._trims is not None:
+                h = self._trims.open(framework, name, version)
+                m = LoadedModel(key, h.weights, h.nbytes, h.timings,
+                                via_trims=True, handle=h)
+            else:
+                self.acct.cold_starts += 1
+                m = cold_load(self.platform.disk, key)
+            self.acct.model_load_s += time.perf_counter() - t0
+            self.acct.bytes_loaded += m.nbytes
+            self._models[key] = m
+            return m
+
+    def unload_model(self, m: LoadedModel):
+        with self._lock:
+            self._models.pop(m.key, None)
+        free_model(m, self._trims)
+
+    def teardown(self):
+        with self._lock:
+            models = list(self._models.values())
+            self._models = {}
+        for m in models:
+            free_model(m, self._trims)
+        if self._trims is not None:
+            self._trims.close_all()
+
+    # handles must not cross containers: expose an opaque check the platform
+    # uses when functions exchange data
+    def owns(self, m: LoadedModel) -> bool:
+        return m.key in self._models
+
+
+@dataclass
+class FunctionSpec:
+    name: str
+    fn: Callable[["Container", Any], Any]
+    allowed_models: Optional[Sequence[Tuple[str, str]]] = None
+
+
+class FaaSPlatform:
+    """One node: containers + (optionally) a TrIMS MRM."""
+
+    def __init__(self, mrm: Optional[MRM], disk=None, name: str = "node0"):
+        self.mrm = mrm
+        self.disk = disk if disk is not None else (mrm.disk if mrm else None)
+        self.name = name
+        self.functions: Dict[str, FunctionSpec] = {}
+        self.containers: Dict[str, Container] = {}
+        self._lock = threading.RLock()
+
+    def deploy(self, name: str, fn: Callable, allowed_models=None,
+               use_trims: bool = True) -> Container:
+        spec = FunctionSpec(name, fn, allowed_models)
+        with self._lock:
+            self.functions[name] = spec
+            c = Container(self, name, allowed_models, use_trims=use_trims)
+            self.containers[name] = c
+        return c
+
+    def undeploy(self, name: str):
+        with self._lock:
+            c = self.containers.pop(name, None)
+            self.functions.pop(name, None)
+        if c is not None:
+            c.teardown()
+
+    def invoke(self, name: str, payload: Any = None) -> Any:
+        with self._lock:
+            spec = self.functions.get(name)
+            c = self.containers.get(name)
+        if spec is None or c is None:
+            raise KeyError(f"function {name!r} not deployed")
+        t0 = time.perf_counter()
+        out = spec.fn(c, payload)
+        dt = time.perf_counter() - t0
+        c.acct.invocations += 1
+        c.acct.total_s += dt
+        c.acct.latencies.append(dt)
+        return out
+
+    def invoke_pipeline(self, names: Sequence[str], payload: Any = None) -> Any:
+        """Chained functions — the paper's image->scene-description pipeline."""
+        for n in names:
+            payload = self.invoke(n, payload)
+        return payload
+
+    def advertised_models(self) -> List[ModelKey]:
+        """Models currently warm on this node (paper §4.2 multi-node)."""
+        if self.mrm is None:
+            return []
+        with self.mrm.device.lock:
+            return list(self.mrm.device.entries.keys())
+
+    def load(self) -> int:
+        return sum(c.acct.invocations for c in self.containers.values())
+
+
+class Router:
+    """Affinity-aware load balancer over several FaaS nodes."""
+
+    def __init__(self, nodes: Sequence[FaaSPlatform]):
+        self.nodes = list(nodes)
+
+    def route(self, fn_name: str, needed_models: Sequence[ModelKey] = ()) -> FaaSPlatform:
+        def score(node: FaaSPlatform):
+            warm = set(node.advertised_models())
+            affinity = sum(1 for k in needed_models if ModelKey(*k) in warm)
+            return (-affinity, node.load())
+
+        return min((n for n in self.nodes if fn_name in n.functions),
+                   key=score)
+
+    def invoke(self, fn_name: str, payload=None, needed_models=()):
+        return self.route(fn_name, needed_models).invoke(fn_name, payload)

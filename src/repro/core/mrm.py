@@ -1,0 +1,297 @@
+"""TrIMS Model Resource Manager (paper §4.1).
+
+The MRM is the daemon that owns the multi-tier model cache and abstracts
+model loading away from framework clients. ``open`` implements the Fig. 7
+state machine:
+
+  DEVICE hit             -> refcount++, hand out shared device arrays
+  DEVICE miss / HOST hit -> make room on device, stage host->device
+  HOST+DEVICE miss       -> disk (or cloud download), deserialize into
+                            host tier, then stage to device
+
+Models are addressed by namespace ``(framework, name, version)``. Entries
+with live references are never evicted; concurrent opens of the same model
+coalesce into one load (thundering-herd dedup). Timings are recorded
+per-stage, both measured (real disk/deserialize work on this host) and
+modeled (TPU H2D at ``hw.h2d_bw``) — see DESIGN.md §2.
+"""
+from __future__ import annotations
+
+import itertools
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, NamedTuple, Optional
+
+import numpy as np
+
+from repro.core.cache import CapacityError, Tier, TierCache
+from repro.core.costmodel import HardwareModel, get_hardware
+from repro.core.store import CloudStore, DiskStore, ModelFile
+
+
+class ModelKey(NamedTuple):
+    framework: str
+    name: str
+    version: str = "1"
+
+
+@dataclass
+class OpenTimings:
+    tier_hit: str = ""
+    cloud_s: float = 0.0          # modeled download time
+    disk_read_s: float = 0.0      # measured file -> host bytes
+    deserialize_s: float = 0.0    # measured unmarshal -> arrays
+    h2d_measured_s: float = 0.0   # measured jnp staging on this host
+    h2d_modeled_s: float = 0.0    # modeled TPU PCIe staging
+    share_overhead_s: float = 0.0 # measured handle-creation overhead (o+s per object)
+    total_s: float = 0.0
+
+    def modeled_total(self) -> float:
+        return (self.cloud_s + self.disk_read_s + self.deserialize_s
+                + self.h2d_modeled_s + self.share_overhead_s)
+
+
+@dataclass
+class HostModel:
+    arrays: Dict[str, np.ndarray]
+    nbytes: int
+    shm_segments: list = field(default_factory=list)  # ShmSegment list (ipc mode)
+
+    def release(self):
+        self.arrays = {}
+        for seg in self.shm_segments:
+            seg.close_and_unlink()
+        self.shm_segments = []
+
+
+@dataclass
+class ModelHandle:
+    handle_id: int
+    key: ModelKey
+    weights: Dict[str, object]   # name -> jax.Array (device) / np.ndarray (host)
+    nbytes: int
+    timings: OpenTimings
+    granularity: str = "model"
+    n_objects: int = 1
+    tier: str = "device"
+    closed: bool = False
+
+
+def _default_device_put(arr: np.ndarray):
+    import jax.numpy as jnp
+    return jnp.asarray(arr)
+
+
+class MRM:
+    """Model Resource Manager server (in-process core; see shm_ipc for the
+    cross-process wrapper)."""
+
+    def __init__(self,
+                 disk: DiskStore,
+                 cloud: Optional[CloudStore] = None,
+                 device_capacity: int = 12 * 2 ** 30,
+                 host_capacity: int = 64 * 2 ** 30,
+                 policy: str = "lru",
+                 hw: Optional[HardwareModel] = None,
+                 eager_reclaim: bool = False,
+                 use_shm: bool = False,
+                 device_put_fn: Callable = _default_device_put,
+                 simulate_h2d_time: bool = False):
+        self.disk = disk
+        self.cloud = cloud
+        self.hw = hw or get_hardware()
+        self.device = TierCache(Tier.DEVICE, device_capacity, policy)
+        self.host = TierCache(Tier.HOST, host_capacity, policy)
+        self.eager_reclaim = eager_reclaim
+        self.use_shm = use_shm
+        self.device_put_fn = device_put_fn
+        self.simulate_h2d_time = simulate_h2d_time
+        self._handles: Dict[int, ModelHandle] = {}
+        self._hid = itertools.count(1)
+        self._lock = threading.RLock()
+        self._loading: Dict[ModelKey, threading.Event] = {}
+        self.metrics = {
+            "opens": 0, "closes": 0, "coalesced_loads": 0,
+            "cloud_downloads": 0, "disk_loads": 0, "h2d_stages": 0,
+            "bytes_from_disk": 0, "bytes_h2d": 0,
+        }
+
+    # ------------------------------------------------------------------ API
+    def open(self, key: ModelKey, activation_bytes: int = 0,
+             granularity: str = "model", tier: str = "device") -> ModelHandle:
+        """Load (or attach to) a model; returns a refcounted handle.
+
+        ``tier="host"`` returns host-resident numpy views without device
+        staging — the cross-process (shm_ipc) path.
+        """
+        t_start = time.perf_counter()
+        key = ModelKey(*key)
+        timings = OpenTimings()
+        with self._lock:
+            self.metrics["opens"] += 1
+
+        while True:
+            wait_ev = None
+            with self._lock:
+                hit = (self.device.get(key) if tier == "device"
+                       else self.host.get(key))
+                if hit is not None and hit.payload is None:
+                    hit = None  # capacity reserved, staging in flight
+                if hit is not None:
+                    hit.refcount += 1
+                    timings.tier_hit = tier
+                    handle = self._make_handle(key, hit, timings, granularity,
+                                               t_start, tier)
+                    return handle
+                ev = self._loading.get(key)
+                if ev is None:
+                    self._loading[key] = threading.Event()
+                    break  # we are the loader
+                wait_ev = ev
+                self.metrics["coalesced_loads"] += 1
+            wait_ev.wait()
+
+        try:
+            handle = self._load_and_stage(key, activation_bytes, granularity,
+                                          timings, t_start, tier)
+            return handle
+        finally:
+            with self._lock:
+                ev = self._loading.pop(key, None)
+            if ev is not None:
+                ev.set()
+
+    def close(self, handle: ModelHandle):
+        with self._lock:
+            if handle.closed:
+                return
+            handle.closed = True
+            self.metrics["closes"] += 1
+            self._handles.pop(handle.handle_id, None)
+            cache = self.device if handle.tier == "device" else self.host
+            e = cache.peek(handle.key)
+            if e is not None and e.refcount > 0:
+                e.refcount -= 1
+                if self.eager_reclaim and e.refcount == 0:
+                    cache.remove(handle.key)
+                    if handle.tier == "host" and e.payload is not None:
+                        e.payload.release()
+                    e.payload = None
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {"device": self.device.stats(), "host": self.host.stats(),
+                    **self.metrics}
+
+    # ------------------------------------------------------------- internals
+    def _make_handle(self, key, entry, timings, granularity, t_start,
+                     tier: str = "device") -> ModelHandle:
+        t0 = time.perf_counter()
+        payload = entry.payload.arrays if isinstance(entry.payload, HostModel) \
+            else entry.payload
+        weights = dict(payload)  # shallow: arrays shared, dict private
+        timings.share_overhead_s = time.perf_counter() - t0
+        timings.total_s = time.perf_counter() - t_start
+        h = ModelHandle(next(self._hid), key, weights, entry.nbytes,
+                        timings, granularity,
+                        n_objects=1 if granularity == "model" else len(weights),
+                        tier=tier)
+        with self._lock:
+            self._handles[h.handle_id] = h
+        return h
+
+    def _load_and_stage(self, key, activation_bytes, granularity,
+                        timings, t_start, tier: str = "device") -> ModelHandle:
+        host_entry = self.host.get(key)
+        if host_entry is None:
+            timings.tier_hit = "disk" if self.disk.contains(key) else "cloud"
+            host_entry = self._load_host(key, timings)
+        else:
+            timings.tier_hit = "host"
+            host_entry.touch()
+
+        if tier == "host":
+            host_entry.refcount += 1
+            return self._make_handle(key, host_entry, timings, granularity,
+                                     t_start, tier)
+
+        dev_entry = self._stage_device(key, host_entry, activation_bytes, timings)
+        dev_entry.refcount += 1
+        return self._make_handle(key, dev_entry, timings, granularity, t_start)
+
+    def _load_host(self, key, timings) -> "object":
+        if not self.disk.contains(key):
+            if self.cloud is None or not self.cloud.contains(key):
+                raise FileNotFoundError(f"model {key} not found in any tier")
+            modeled, nbytes = self.cloud.download(key, self.disk)
+            timings.cloud_s = modeled
+            with self._lock:
+                self.metrics["cloud_downloads"] += 1
+
+        mf = self.disk.open(key)
+        nbytes = mf.total_bytes
+
+        for victim in self.host.make_room(nbytes):
+            if victim.payload is not None:
+                victim.payload.release()
+
+        t0 = time.perf_counter()
+        if self.use_shm:
+            from repro.core.shm_ipc import ShmSegment
+            seg = ShmSegment.create(key, nbytes)
+            arrays = {}
+            off = 0
+            for name, tm in mf.tensors.items():
+                view = memoryview(seg.buf)[off:off + tm.nbytes]
+                arrays[name] = mf.read_tensor(name, out=view)
+                off += tm.nbytes
+            hm = HostModel(arrays, nbytes, [seg])
+        else:
+            arrays = mf.read_all()
+            hm = HostModel(arrays, nbytes)
+        dt = time.perf_counter() - t0
+        # attribute: raw I/O at measured disk bw, remainder = deserialize
+        io_est = self.hw.disk_time(nbytes)
+        timings.disk_read_s = min(dt, io_est)
+        timings.deserialize_s = max(0.0, dt - timings.disk_read_s)
+        with self._lock:
+            self.metrics["disk_loads"] += 1
+            self.metrics["bytes_from_disk"] += nbytes
+
+        return self.host.insert(key, nbytes, payload=hm)
+
+    def _stage_device(self, key, host_entry, activation_bytes, timings):
+        nbytes = host_entry.nbytes
+        need = nbytes + activation_bytes
+        # reserve capacity atomically (make_room + insert under one lock):
+        # concurrent stages of DIFFERENT models must not steal each other's
+        # freed room between eviction and insertion
+        with self.device.lock:
+            evicted = self.device.make_room(need)
+            for _ in evicted:
+                pass  # device copies dropped; host/disk copies remain
+            entry = self.device.insert(key, nbytes, payload=None)
+
+        t0 = time.perf_counter()
+        hm: HostModel = host_entry.payload
+        weights = {n: self.device_put_fn(a) for n, a in hm.arrays.items()}
+        timings.h2d_measured_s = time.perf_counter() - t0
+        timings.h2d_modeled_s = self.hw.h2d_time(nbytes)
+        if self.simulate_h2d_time and timings.h2d_measured_s < timings.h2d_modeled_s:
+            time.sleep(min(timings.h2d_modeled_s - timings.h2d_measured_s, 0.25))
+        with self._lock:
+            self.metrics["h2d_stages"] += 1
+            self.metrics["bytes_h2d"] += nbytes
+        entry.payload = weights
+        return entry
+
+    # ----------------------------------------------------------- inspection
+    def resident(self, key: ModelKey, tier: Tier) -> bool:
+        key = ModelKey(*key)
+        cache = self.device if tier == Tier.DEVICE else self.host
+        return cache.peek(key) is not None
+
+    def refcount(self, key: ModelKey) -> int:
+        e = self.device.peek(ModelKey(*key))
+        return 0 if e is None else e.refcount

@@ -1,0 +1,265 @@
+"""Cross-process TrIMS: unix-socket control plane + POSIX-shm data plane.
+
+This is the TPU-era analogue of the paper's gRPC + CUDA-IPC pair (DESIGN.md
+§2): the MRM daemon deserializes each model **once** into shared-memory
+segments; isolated client *processes* receive segment names over a
+length-prefixed msgpack protocol and attach zero-copy numpy views. Device
+staging (host->HBM) happens in whoever owns the accelerator — on a TPU host
+that is the serving runtime; clients here get the host-tier handle, which is
+precisely the tier a TPU process boundary can share.
+
+Wire protocol (msgpack, 4-byte little-endian length prefix)::
+
+  {op: "open", framework, name, version}  ->
+      {ok, handle_id, nbytes, segments: [{shm, size}],
+       tensors: [{name, dtype, shape, segment, offset}], timings: {...}}
+  {op: "close", handle_id}                -> {ok}
+  {op: "stats"}                           -> {ok, stats}
+"""
+from __future__ import annotations
+
+import os
+import socket
+import struct
+import threading
+import time
+import uuid
+from dataclasses import dataclass
+from multiprocessing import shared_memory
+from typing import Dict, List, Optional
+
+import msgpack
+import numpy as np
+
+from repro.core.mrm import MRM, ModelKey
+from repro.core.store import _np_dtype
+
+
+class ShmSegment:
+    """Owner-side shared memory segment."""
+
+    def __init__(self, shm: shared_memory.SharedMemory, owner: bool):
+        self.shm = shm
+        self.owner = owner
+
+    @property
+    def name(self) -> str:
+        return self.shm.name
+
+    @property
+    def buf(self):
+        return self.shm.buf
+
+    @classmethod
+    def create(cls, key, nbytes: int) -> "ShmSegment":
+        name = f"trims_{uuid.uuid4().hex[:16]}"
+        return cls(shared_memory.SharedMemory(create=True, size=max(1, nbytes),
+                                              name=name), owner=True)
+
+    @classmethod
+    def attach(cls, name: str) -> "ShmSegment":
+        try:
+            # track=False (3.13+): the attaching process must NOT let its
+            # resource tracker unlink a segment owned by the MRM daemon.
+            shm = shared_memory.SharedMemory(name=name, track=False)
+        except TypeError:  # older python
+            shm = shared_memory.SharedMemory(name=name)
+        return cls(shm, owner=False)
+
+    def close_and_unlink(self):
+        try:
+            self.shm.close()
+        except Exception:
+            pass
+        if self.owner:
+            try:
+                self.shm.unlink()
+            except Exception:
+                pass
+
+
+# ---------------------------------------------------------------------------
+# framing
+# ---------------------------------------------------------------------------
+
+def _send(sock: socket.socket, obj: dict):
+    data = msgpack.packb(obj, use_bin_type=True)
+    sock.sendall(struct.pack("<I", len(data)) + data)
+
+
+def _recv(sock: socket.socket) -> Optional[dict]:
+    hdr = _recvn(sock, 4)
+    if hdr is None:
+        return None
+    (n,) = struct.unpack("<I", hdr)
+    data = _recvn(sock, n)
+    if data is None:
+        return None
+    return msgpack.unpackb(data, raw=False)
+
+
+def _recvn(sock: socket.socket, n: int) -> Optional[bytes]:
+    buf = b""
+    while len(buf) < n:
+        chunk = sock.recv(n - len(buf))
+        if not chunk:
+            return None
+        buf += chunk
+    return buf
+
+
+# ---------------------------------------------------------------------------
+# server
+# ---------------------------------------------------------------------------
+
+class MRMServer:
+    """Threaded daemon exposing an MRM over a unix socket."""
+
+    def __init__(self, mrm: MRM, sock_path: str):
+        assert mrm.use_shm, "MRMServer requires MRM(use_shm=True)"
+        self.mrm = mrm
+        self.sock_path = sock_path
+        if os.path.exists(sock_path):
+            os.unlink(sock_path)
+        self.sock = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+        self.sock.bind(sock_path)
+        self.sock.listen(64)
+        self._stop = threading.Event()
+        self.thread = threading.Thread(target=self._accept_loop, daemon=True)
+        self.thread.start()
+
+    def _accept_loop(self):
+        while not self._stop.is_set():
+            try:
+                self.sock.settimeout(0.2)
+                conn, _ = self.sock.accept()
+            except socket.timeout:
+                continue
+            except OSError:
+                return
+            threading.Thread(target=self._serve_conn, args=(conn,),
+                             daemon=True).start()
+
+    def _serve_conn(self, conn: socket.socket):
+        conn_handles: List[int] = []
+        try:
+            while True:
+                req = _recv(conn)
+                if req is None:
+                    break
+                try:
+                    resp = self._dispatch(req, conn_handles)
+                except Exception as e:  # noqa: BLE001 — wire errors back
+                    resp = {"ok": False, "error": f"{type(e).__name__}: {e}"}
+                _send(conn, resp)
+        finally:
+            # connection death releases its handles (paper: "user process exits")
+            for hid in conn_handles:
+                h = self.mrm._handles.get(hid)
+                if h is not None:
+                    self.mrm.close(h)
+            conn.close()
+
+    def _dispatch(self, req: dict, conn_handles: List[int]) -> dict:
+        op = req.get("op")
+        if op == "open":
+            key = ModelKey(req["framework"], req["name"], req.get("version", "1"))
+            h = self.mrm.open(key, tier="host")
+            conn_handles.append(h.handle_id)
+            host_entry = self.mrm.host.peek(key)
+            hm = host_entry.payload
+            segs = [{"shm": s.name, "size": s.shm.size} for s in hm.shm_segments]
+            tensors = []
+            off = 0
+            for name, arr in hm.arrays.items():
+                tensors.append({"name": name, "dtype": str(arr.dtype),
+                                "shape": list(arr.shape), "segment": 0,
+                                "offset": off})
+                off += arr.nbytes
+            t = h.timings
+            return {"ok": True, "handle_id": h.handle_id, "nbytes": h.nbytes,
+                    "segments": segs, "tensors": tensors,
+                    "timings": {"tier_hit": t.tier_hit, "cloud_s": t.cloud_s,
+                                "disk_read_s": t.disk_read_s,
+                                "deserialize_s": t.deserialize_s,
+                                "total_s": t.total_s}}
+        if op == "close":
+            hid = req["handle_id"]
+            h = self.mrm._handles.get(hid)
+            if h is not None:
+                self.mrm.close(h)
+                if hid in conn_handles:
+                    conn_handles.remove(hid)
+            return {"ok": True}
+        if op == "stats":
+            return {"ok": True, "stats": self.mrm.stats()}
+        raise ValueError(f"unknown op {op!r}")
+
+    def stop(self):
+        self._stop.set()
+        try:
+            self.sock.close()
+        finally:
+            if os.path.exists(self.sock_path):
+                os.unlink(self.sock_path)
+        self.thread.join(timeout=2)
+
+
+# ---------------------------------------------------------------------------
+# client
+# ---------------------------------------------------------------------------
+
+@dataclass
+class RemoteHandle:
+    handle_id: int
+    nbytes: int
+    arrays: Dict[str, np.ndarray]
+    timings: dict
+    attach_s: float              # measured o+s (share overhead) on this open
+    _segments: List[ShmSegment] = None  # type: ignore
+
+
+class RemoteTrimsClient:
+    """Client-process stub: attaches shm segments published by MRMServer."""
+
+    def __init__(self, sock_path: str):
+        self.sock = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+        self.sock.connect(sock_path)
+
+    def open(self, framework: str, name: str, version: str = "1") -> RemoteHandle:
+        _send(self.sock, {"op": "open", "framework": framework,
+                          "name": name, "version": version})
+        resp = _recv(self.sock)
+        if resp is None or not resp.get("ok"):
+            raise RuntimeError(f"open failed: {resp}")
+        t0 = time.perf_counter()
+        segs = [ShmSegment.attach(s["shm"]) for s in resp["segments"]]
+        arrays = {}
+        for tm in resp["tensors"]:
+            seg = segs[tm["segment"]]
+            count = int(np.prod(tm["shape"])) if tm["shape"] else 1
+            arr = np.frombuffer(seg.buf, dtype=_np_dtype(tm["dtype"]),
+                                count=count, offset=tm["offset"])
+            arrays[tm["name"]] = arr.reshape(tm["shape"])
+        attach_s = time.perf_counter() - t0
+        return RemoteHandle(resp["handle_id"], resp["nbytes"], arrays,
+                            resp["timings"], attach_s, segs)
+
+    def close(self, h: RemoteHandle):
+        # views must die before the segment detaches
+        h.arrays = {}
+        for seg in h._segments or []:
+            try:
+                seg.shm.close()
+            except Exception:
+                pass
+        _send(self.sock, {"op": "close", "handle_id": h.handle_id})
+        _recv(self.sock)
+
+    def stats(self) -> dict:
+        _send(self.sock, {"op": "stats"})
+        resp = _recv(self.sock)
+        return resp["stats"]
+
+    def disconnect(self):
+        self.sock.close()

@@ -1,0 +1,110 @@
+"""Deterministic synthetic token pipeline, sharded + prefetched.
+
+Data is generated from a counter-based hash (stateless: any (step, position)
+is recomputable after restart — exact-resume checkpointing needs no data-state
+snapshot). Batches are built per-shard with
+``jax.make_array_from_callback`` so each host only materializes its
+addressable slice — the multi-host pattern, degenerate on single host.
+
+Straggler mitigation: the prefetch thread keeps a bounded queue ahead of the
+training loop; a slow generation step never stalls the device while queued
+batches remain (see runtime/fault.py for the re-dispatch logic).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ENCDEC, VLM
+
+
+def _hash_tokens(step: int, shape, vocab: int, salt: int = 0x9E3779B9) -> np.ndarray:
+    """Counter-based stateless PRNG (splitmix-style) -> tokens in [0, vocab)."""
+    n = int(np.prod(shape))
+    idx = (np.arange(n, dtype=np.uint64) + np.uint64(step) * np.uint64(n + 1)
+           + np.uint64(salt))
+    z = (idx + np.uint64(0x9E3779B97F4A7C15))
+    z = (z ^ (z >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)
+    z = (z ^ (z >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)
+    z = z ^ (z >> np.uint64(31))
+    return (z % np.uint64(vocab)).astype(np.int32).reshape(shape)
+
+
+def make_batch(cfg: ModelConfig, step: int, batch_size: int, seq_len: int,
+               sharding: Optional[jax.sharding.NamedSharding] = None,
+               frontend_len: Optional[int] = None) -> Dict[str, jax.Array]:
+    """One global batch. ``sharding`` places tokens across the mesh.
+
+    Sequences are modular arithmetic progressions with hash-random starts
+    and strides: deterministic, unique per step, and LEARNABLE (a model
+    that infers the stride from context beats the uniform baseline) — pure
+    hash-random tokens would pin the loss at ln(vocab) forever."""
+    starts = _hash_tokens(step, (batch_size, 1), cfg.vocab_size)
+    strides = _hash_tokens(step, (batch_size, 1), 7, salt=0x51DE) + 1
+    idx = np.arange(seq_len + 1, dtype=np.int64)[None, :]
+    toks = ((starts.astype(np.int64) + idx * strides.astype(np.int64))
+            % cfg.vocab_size).astype(np.int32)
+    batch_np = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+    if cfg.family in (ENCDEC, VLM):
+        fl = frontend_len or (cfg.n_frontend_tokens or seq_len)
+        fe = (_hash_tokens(step, (batch_size, fl, cfg.d_model), 2048, salt=0xABCD)
+              .astype(np.float32) / 1024.0 - 1.0)
+        batch_np["frontend"] = fe.astype(np.float32)
+
+    if sharding is None:
+        return {k: jnp.asarray(v) for k, v in batch_np.items()}
+
+    out = {}
+    batch_axes = sharding.spec[0] if len(sharding.spec) else None
+    for k, v in batch_np.items():
+        spec = jax.sharding.PartitionSpec(batch_axes, *([None] * (v.ndim - 1)))
+        shd = jax.sharding.NamedSharding(sharding.mesh, spec)
+        out[k] = jax.make_array_from_callback(
+            v.shape, shd, lambda idx, v=v: v[idx])
+    return out
+
+
+class Prefetcher:
+    """Background thread generating batches ``depth`` steps ahead."""
+
+    def __init__(self, cfg: ModelConfig, batch_size: int, seq_len: int,
+                 sharding=None, depth: int = 2, start_step: int = 0):
+        self.cfg, self.bs, self.sl = cfg, batch_size, seq_len
+        self.sharding = sharding
+        self.q: "queue.Queue" = queue.Queue(maxsize=depth)
+        self.step = start_step
+        self._stop = threading.Event()
+        self.thread = threading.Thread(target=self._run, daemon=True)
+        self.thread.start()
+
+    def _run(self):
+        s = self.step
+        while not self._stop.is_set():
+            b = make_batch(self.cfg, s, self.bs, self.sl, self.sharding)
+            while not self._stop.is_set():
+                try:
+                    self.q.put((s, b), timeout=0.1)
+                    break
+                except queue.Full:
+                    continue
+            s += 1
+
+    def __iter__(self) -> Iterator:
+        return self
+
+    def __next__(self):
+        return self.q.get()
+
+    def stop(self):
+        self._stop.set()
+        try:
+            while True:
+                self.q.get_nowait()
+        except queue.Empty:
+            pass
+        self.thread.join(timeout=2)

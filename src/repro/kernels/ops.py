@@ -1,0 +1,74 @@
+"""Jit'd dispatch wrappers: Pallas kernels on TPU, jnp oracles elsewhere.
+
+Model code calls these; ``cfg.use_pallas`` / platform detection selects the
+path. Layout adaptation lives here (models use (B, S, H, D); kernels use
+(B, H, S, D)).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention as _decode_pallas
+from repro.kernels.flash_attention import flash_attention as _flash_pallas
+from repro.kernels.rmsnorm import rmsnorm as _rmsnorm_pallas
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+import functools
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _flash_vjp(qt, kt, vt, causal, block_q, block_k):
+    return _flash_pallas(qt, kt, vt, causal=causal, block_q=block_q,
+                         block_k=block_k, interpret=not on_tpu())
+
+
+def _flash_fwd(qt, kt, vt, causal, block_q, block_k):
+    return _flash_vjp(qt, kt, vt, causal, block_q, block_k), (qt, kt, vt)
+
+
+def _flash_bwd(causal, block_q, block_k, res, g):
+    # backward through the jnp oracle (recompute-form flash bwd): exact same
+    # math, memory-bounded by the chunked form on TPU via remat
+    qt, kt, vt = res
+    _, vjp = jax.vjp(lambda q, k, v: ref.mha_reference(q, k, v, causal=causal),
+                     qt, kt, vt)
+    return vjp(g)
+
+
+_flash_vjp.defvjp(_flash_fwd, _flash_bwd)
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    block_q: int = 128, block_k: int = 128):
+    """q: (B, S, Hq, D); k, v: (B, T, Hkv, D) -> (B, S, Hq, D).
+
+    Differentiable: Pallas forward + oracle backward (custom_vjp)."""
+    qt = jnp.swapaxes(q, 1, 2)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    out = _flash_vjp(qt, kt, vt, causal, block_q, block_k)
+    return jnp.swapaxes(out, 1, 2)
+
+
+def decode_attention(q, k_cache, v_cache, kv_len, *, block_k: int = 256):
+    """q: (B, Hq, D) or (B, 1, Hq, D); caches: (B, T, Hkv, D)."""
+    squeeze = q.ndim == 4
+    if squeeze:
+        q = q[:, 0]
+    kt = jnp.swapaxes(k_cache, 1, 2)
+    vt = jnp.swapaxes(v_cache, 1, 2)
+    out = _decode_pallas(q, kt, vt, kv_len, block_k=block_k,
+                         interpret=not on_tpu())
+    return out[:, None] if squeeze else out
+
+
+def rmsnorm(x, scale, eps: float = 1e-5):
+    if on_tpu():
+        return _rmsnorm_pallas(x, scale, eps=eps)
+    return ref.rmsnorm_reference(x, scale, eps)

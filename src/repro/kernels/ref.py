@@ -1,0 +1,49 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets)."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def mha_reference(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                  causal: bool = True) -> jnp.ndarray:
+    """q: (B, Hq, S, D); k, v: (B, Hkv, T, D). GQA via head grouping.
+
+    fp32 softmax, output in q.dtype.
+    """
+    B, Hq, S, D = q.shape
+    Hkv, T = k.shape[1], k.shape[2]
+    g = Hq // Hkv
+    qg = q.reshape(B, Hkv, g, S, D)
+    s = jnp.einsum("bhgsd,bhtd->bhgst", qg, k).astype(jnp.float32) / math.sqrt(D)
+    if causal:
+        mask = jnp.arange(S)[:, None] >= jnp.arange(T)[None, :]
+        s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgst,bhtd->bhgsd", p.astype(q.dtype), v)
+    return o.reshape(B, Hq, S, D)
+
+
+def decode_reference(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                     kv_len: jnp.ndarray) -> jnp.ndarray:
+    """q: (B, Hq, D) one token; k, v: (B, Hkv, T, D); kv_len: (B,)."""
+    B, Hq, D = q.shape
+    Hkv, T = k.shape[1], k.shape[2]
+    g = Hq // Hkv
+    qg = q.reshape(B, Hkv, g, D)
+    s = jnp.einsum("bhgd,bhtd->bhgt", qg, k).astype(jnp.float32) / math.sqrt(D)
+    valid = jnp.arange(T)[None, :] < kv_len[:, None]          # (B, T)
+    s = jnp.where(valid[:, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgt,bhtd->bhgd", p.astype(q.dtype), v)
+    return o.reshape(B, Hq, D)
+
+
+def rmsnorm_reference(x: jnp.ndarray, scale: jnp.ndarray,
+                      eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(x.dtype)

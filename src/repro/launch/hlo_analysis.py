@@ -1,0 +1,336 @@
+"""Structural analysis of compiled (post-SPMD, post-fusion) HLO text.
+
+Why not ``compiled.cost_analysis()``: it reports while/scan bodies ONCE, not
+multiplied by trip count — a 48-layer scanned model would be undercounted
+48x, and the per-layer FSDP all-gathers would vanish from the collective
+term entirely. This module parses HLO text, recovers while trip counts
+(jax's scan lowers to a counted loop), walks the call graph (while bodies
+x trip, fusions/calls x1) and accumulates:
+
+  * dot FLOPs            2 * prod(result) * prod(lhs contracting dims)
+  * HBM traffic proxy    sum of operand+result bytes per top-level (fused)
+                         instruction — post-fusion boundaries ~ HBM round trips
+  * collective traffic   per-chip ring-model bytes from RESULT sizes R:
+        all-reduce          2 * R * (n-1)/n
+        all-gather          R * (n-1)/n        (result = gathered size)
+        reduce-scatter      R * (n-1)          (result = shard)
+        all-to-all          R * (n-1)/n
+        collective-permute  R
+
+All numbers are PER-CHIP (the compiled module is the per-device SPMD
+program). Roofline terms divide by per-chip peak rates.
+"""
+from __future__ import annotations
+
+import math
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+    "s2": 1, "u2": 1,
+}
+
+_TYPE_RE = re.compile(r"\b([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%([\w.\-]+)\s+\(")
+_INSTR_RE = re.compile(r"^(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.+)$")
+# first "opcode(" token after the result type (which may be a tuple with
+# /*index=N*/ comments, so we search rather than anchor)
+_OPCODE_RE = re.compile(r"(?:^|\s)([a-z][a-z0-9\-]*)\(")
+_WHILE_RE = re.compile(r"condition=%?([\w.\-]+)\s*,\s*body=%?([\w.\-]+)|"
+                       r"body=%?([\w.\-]+)\s*,\s*condition=%?([\w.\-]+)")
+_CALLS_RE = re.compile(r"(?:calls|to_apply)=%?([\w.\-]+)")
+_REPL_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_REPL_BRACE_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_DOT_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_TRIP_RE = re.compile(r"known_trip_count\":\{\"n\":\"(\d+)\"")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# zero-traffic plumbing: views/metadata ops that move no HBM bytes
+_NO_TRAFFIC = {
+    "parameter", "tuple", "get-tuple-element", "bitcast", "constant",
+    "after-all", "while", "conditional", "call", "partition-id",
+    "replica-id", "iota", "get-dimension-size", "domain", "opt-barrier",
+}
+
+
+def _shape_elems(dims: str) -> int:
+    if not dims:
+        return 1
+    return math.prod(int(d) for d in dims.split(",") if d)
+
+
+def _type_bytes(segment: str) -> int:
+    return sum(_DTYPE_BYTES.get(dt, 4) * _shape_elems(dims)
+               for dt, dims in _TYPE_RE.findall(segment))
+
+
+def _operand_segment(rhs: str, op_end: int) -> str:
+    """Balanced-paren slice of the operand list starting at rhs[op_end-1]."""
+    depth = 0
+    for i in range(op_end - 1, len(rhs)):
+        if rhs[i] == "(":
+            depth += 1
+        elif rhs[i] == ")":
+            depth -= 1
+            if depth == 0:
+                return rhs[op_end:i]
+    return rhs[op_end:]
+
+
+@dataclass
+class CompStats:
+    dot_flops: float = 0.0
+    traffic_bytes: float = 0.0
+    coll_bytes: Dict[str, float] = field(default_factory=lambda: defaultdict(float))
+    coll_counts: Dict[str, float] = field(default_factory=lambda: defaultdict(float))
+    # (callee, multiplier, carries_traffic): while bodies execute from HBM
+    # (traffic counts); fusion/reduce subcomputations run in registers
+    calls: List[Tuple[str, float, bool]] = field(default_factory=list)
+
+
+def _split_computations(hlo: str) -> Dict[str, List[str]]:
+    comps: Dict[str, List[str]] = {}
+    cur: Optional[str] = None
+    for raw in hlo.splitlines():
+        if not raw.startswith(" ") and raw.rstrip().endswith("{"):
+            m = _COMP_HDR_RE.match(raw.lstrip().removeprefix("ENTRY ").lstrip())
+            m2 = _COMP_HDR_RE.match(raw.lstrip())
+            mm = m2 or m
+            if "->" in raw and mm:
+                cur = mm.group(1)
+                comps[cur] = []
+                continue
+        s = raw.strip()
+        if cur is not None:
+            if s == "}":
+                cur = None
+            elif s:
+                comps[cur].append(s)
+    return comps
+
+
+def _group_size(line: str, default_n: int) -> int:
+    m = _REPL_IOTA_RE.search(line)
+    if m:
+        return max(1, int(m.group(2)))  # [n_groups, group_size]<=[N]
+    m = _REPL_BRACE_RE.search(line)
+    if m:
+        return max(1, len([x for x in m.group(1).split(",") if x.strip()]))
+    return default_n
+
+
+def _while_trip_counts(comps: Dict[str, List[str]]) -> Dict[str, float]:
+    """cond-computation name -> trip count (compare LT against a constant)."""
+    trips: Dict[str, float] = {}
+    for name, lines in comps.items():
+        consts: Dict[str, int] = {}
+        for line in lines:
+            cm = re.match(r"(?:ROOT\s+)?%([\w.\-]+)\s*=\s*s32\[\]\s+constant\((\d+)\)",
+                          line)
+            if cm:
+                consts[cm.group(1)] = int(cm.group(2))
+        for line in lines:
+            if "compare(" in line and "direction=LT" in line:
+                ops = re.findall(r"%([\w.\-]+)", line.split("compare(", 1)[1])
+                for o in ops:
+                    if o in consts:
+                        trips[name] = float(consts[o])
+                        break
+        # fallback: cond computations that call a wrapped compare fusion keep
+        # the loop bound as their only s32 constant
+        if name not in trips and len(consts) == 1 and \
+                any("compare" in l or "fusion(" in l for l in lines):
+            trips[name] = float(next(iter(consts.values())))
+    return trips
+
+
+def _slicing_comps(comps: Dict[str, List[str]]) -> set:
+    """Subcomputations whose effective traffic is ~their result (pure
+    slicing/selection of a big operand), not their operand sizes."""
+    out = set()
+    for name, lines in comps.items():
+        has_slice = any(" dynamic-slice(" in l or "=dynamic-slice(" in l
+                        or l.startswith("dynamic-slice(") or " slice(" in l
+                        or " dynamic-update-slice(" in l
+                        for l in lines)
+        heavy = any(k in l for l in lines
+                    for k in (" reduce(", " dot(", " convolution(",
+                              " scatter(", " sort("))
+        if has_slice and not heavy:
+            out.add(name)
+    return out
+
+
+def _analyze_comp(lines: List[str], default_n: int,
+                  trips: Dict[str, float], slicing: set = frozenset()) -> CompStats:
+    st = CompStats()
+    # first pass: symbol table name -> result type segment
+    types: Dict[str, str] = {}
+    for line in lines:
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, rhs = m.group(1), m.group(2)
+        om = _OPCODE_RE.search(rhs)
+        types[name] = rhs[:om.start()] if om else rhs
+
+    for line in lines:
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, rhs = m.group(1), m.group(2)
+        om = _OPCODE_RE.search(rhs)
+        if not om:
+            continue
+        opcode = om.group(1)
+        base = opcode
+        for suf in ("-start", "-done"):
+            if base.endswith(suf):
+                base = base[: -len(suf)]
+        result_seg = rhs[:om.start()]
+        result_bytes = _type_bytes(result_seg)
+        operands = _operand_segment(rhs, om.end())
+        opnames = re.findall(r"%([\w.\-]+)", operands)
+        operand_bytes = sum(_type_bytes(types.get(o, "")) for o in opnames)
+
+        if base in COLLECTIVES and not opcode.endswith("-done"):
+            n = _group_size(line, default_n)
+            R = float(result_bytes)
+            if base == "all-reduce":
+                traffic = 2.0 * R * (n - 1) / max(n, 1)
+            elif base == "all-gather":
+                traffic = R * (n - 1) / max(n, 1)
+            elif base == "reduce-scatter":
+                traffic = R * (n - 1)
+            elif base == "all-to-all":
+                traffic = R * (n - 1) / max(n, 1)
+            else:  # collective-permute
+                traffic = R
+            st.coll_bytes[base] += traffic
+            st.coll_counts[base] += 1
+        elif base == "dot":
+            lhs = types.get(opnames[0], "") if opnames else ""
+            lm = _TYPE_RE.search(lhs)
+            lhs_shape = [int(d) for d in lm.group(2).split(",") if d] if lm else []
+            cm = _DOT_CONTRACT_RE.search(line)
+            contract = [int(i) for i in cm.group(1).split(",") if i] if cm else []
+            k = math.prod(lhs_shape[i] for i in contract if i < len(lhs_shape)) \
+                if contract else 1
+            st.dot_flops += 2.0 * (result_bytes / max(1, _seg_itemsize(result_seg))) * k
+        elif opcode == "while":
+            wm = _WHILE_RE.search(line)
+            if wm:
+                cond = wm.group(1) or wm.group(4)
+                body = wm.group(2) or wm.group(3)
+                tm2 = _TRIP_RE.search(line)  # XLA annotates known trip counts
+                trip = float(tm2.group(1)) if tm2 else trips.get(cond, 1.0)
+                st.calls.append((body, trip, True))
+
+        for callee in _CALLS_RE.findall(line):
+            st.calls.append((callee, 1.0, False))
+
+        # HBM traffic proxy. Skip plumbing; special-case in-place
+        # dynamic-update-slice (writes only the slice, not the full buffer).
+        if base in _NO_TRAFFIC or opcode.endswith("-done"):
+            continue
+        if base == "dynamic-update-slice":
+            slice_bytes = (_type_bytes(types.get(opnames[1], ""))
+                           if len(opnames) > 1 else result_bytes)
+            st.traffic_bytes += 2.0 * slice_bytes
+        elif base in ("dynamic-slice", "gather", "scatter"):
+            # sliced/gathered access touches ~result bytes, not the whole
+            # operand (a scan slicing stacked params would otherwise count
+            # the full L-layer stack per iteration)
+            st.traffic_bytes += 2.0 * result_bytes
+        elif base == "fusion" and any(c in slicing
+                                      for c in _CALLS_RE.findall(line)):
+            # slicing/in-place-update fusion: traffic ~ the slice moved, which
+            # is the smallest operand (full buffers pass through untouched)
+            op_sizes = [_type_bytes(types.get(o, "")) for o in opnames]
+            op_sizes = [b for b in op_sizes if b > 0]
+            moved = min([result_bytes] + op_sizes) if op_sizes else result_bytes
+            st.traffic_bytes += 2.0 * moved
+        elif base == "copy":
+            # same-layout copies are loop-carry/double-buffer moves that TPU
+            # elides via in-place while buffers; layout-changing copies are
+            # transposes and cost a full round trip
+            res_layout = re.search(r"\{([0-9,]*)\}", result_seg)
+            op_layout = re.search(r"\{([0-9,]*)\}", types.get(opnames[0], "")) \
+                if opnames else None
+            if res_layout and op_layout and \
+                    res_layout.group(1) != op_layout.group(1):
+                st.traffic_bytes += result_bytes + operand_bytes
+            # else: elided on TPU -> zero
+        elif base in COLLECTIVES:
+            st.traffic_bytes += result_bytes  # the local read/write share
+        else:
+            st.traffic_bytes += result_bytes + operand_bytes
+    return st
+
+
+def _seg_itemsize(seg: str) -> int:
+    m = _TYPE_RE.search(seg)
+    return _DTYPE_BYTES.get(m.group(1), 4) if m else 4
+
+
+@dataclass
+class HloSummary:
+    dot_flops: float
+    traffic_bytes: float
+    coll_bytes: Dict[str, float]
+    coll_counts: Dict[str, float]
+    total_coll_bytes: float
+
+    def to_dict(self) -> dict:
+        return {"dot_flops": self.dot_flops, "traffic_bytes": self.traffic_bytes,
+                "coll_bytes": dict(self.coll_bytes),
+                "coll_counts": dict(self.coll_counts),
+                "total_coll_bytes": self.total_coll_bytes}
+
+
+def analyze_hlo(hlo: str, default_group_size: int = 1) -> HloSummary:
+    comps = _split_computations(hlo)
+    trips = _while_trip_counts(comps)
+    slicing = _slicing_comps(comps)
+    stats = {name: _analyze_comp(lines, default_group_size, trips, slicing)
+             for name, lines in comps.items()}
+
+    entry_m = re.search(r"^ENTRY\s+%?([\w.\-]+)", hlo, re.MULTILINE)
+    entry = entry_m.group(1) if entry_m else next(iter(comps))
+
+    memo: Dict[str, Tuple[float, float, Dict[str, float], Dict[str, float]]] = {}
+
+    def roll(name: str, depth=0):
+        if name in memo:
+            return memo[name]
+        if name not in stats or depth > 64:
+            return 0.0, 0.0, {}, {}
+        st = stats[name]
+        memo[name] = (st.dot_flops, st.traffic_bytes, dict(st.coll_bytes),
+                      dict(st.coll_counts))  # cycle guard
+        flops, traffic = st.dot_flops, st.traffic_bytes
+        coll = defaultdict(float, st.coll_bytes)
+        cnt = defaultdict(float, st.coll_counts)
+        for callee, mult, carries_traffic in st.calls:
+            if callee == name:
+                continue
+            cf, ct, cc, cn = roll(callee, depth + 1)
+            flops += mult * cf
+            if carries_traffic:
+                traffic += mult * ct
+            for k, v in cc.items():
+                coll[k] += mult * v
+            for k, v in cn.items():
+                cnt[k] += mult * v
+        memo[name] = (flops, traffic, dict(coll), dict(cnt))
+        return memo[name]
+
+    flops, traffic, coll, cnt = roll(entry)
+    return HloSummary(flops, traffic, coll, cnt, sum(coll.values()))

@@ -1,0 +1,83 @@
+"""Serving launcher: stand up the TrIMS MRM (+ optional cross-process shm
+server) and drive an inference engine over the published model store.
+
+  PYTHONPATH=src python -m repro.launch.serve --store /path/to/models \\
+      --arch olmo-1b --requests 8 [--no-trims] [--shm-socket /tmp/mrm.sock]
+
+If the store is empty, a reduced-config model for --arch is published first
+(so the command is self-contained for demos/smoke).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.configs import get_config, list_archs
+from repro.core import DiskStore, MRM
+from repro.core.costmodel import get_hardware
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--store", default="/tmp/trims_store")
+    ap.add_argument("--arch", default="olmo-1b", choices=list_archs())
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=1)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--no-trims", action="store_true")
+    ap.add_argument("--device-capacity-gb", type=float, default=8.0)
+    ap.add_argument("--policy", default="lru",
+                    choices=["lru", "lcu", "fifo", "largest"])
+    ap.add_argument("--shm-socket", default=None,
+                    help="also expose the MRM to other processes here")
+    args = ap.parse_args()
+
+    import jax
+    from repro.models import init_params
+    from repro.serving import FRAMEWORK, InferenceEngine, publish_model
+
+    disk = DiskStore(args.store)
+    from repro.core.mrm import ModelKey
+    if not disk.contains(ModelKey(FRAMEWORK, args.arch, "1")):
+        cfg = get_config(args.arch).reduced()
+        if cfg.n_experts:
+            cfg = cfg.replace(moe_impl="ragged")
+        print(f"store empty: publishing reduced {args.arch} "
+              f"({cfg.param_count()/1e6:.1f}M params)")
+        publish_model(disk, cfg, init_params(cfg, jax.random.PRNGKey(0)),
+                      name=args.arch)
+
+    mrm = None
+    server = None
+    if not args.no_trims:
+        mrm = MRM(disk, device_capacity=int(args.device_capacity_gb * 2 ** 30),
+                  policy=args.policy, hw=get_hardware(),
+                  use_shm=args.shm_socket is not None)
+        if args.shm_socket:
+            from repro.core.shm_ipc import MRMServer
+            server = MRMServer(mrm, args.shm_socket)
+            print(f"MRM shm server listening on {args.shm_socket}")
+
+    engine = InferenceEngine(disk, mrm, use_trims=mrm is not None)
+    cfgv = get_config(args.arch).reduced()
+    toks = np.random.default_rng(0).integers(
+        0, cfgv.vocab_size - 1,
+        size=(args.batch, args.prompt_len)).astype(np.int32)
+
+    for i in range(args.requests):
+        out, st = engine.generate(args.arch, toks, args.max_new)
+        print(f"req{i}: tier={st.tier_hit:<12} load={st.model_load_s*1e3:8.2f}ms "
+              f"compute={st.compute_s*1e3:8.1f}ms total={st.total_s*1e3:8.1f}ms")
+    if mrm is not None:
+        s = mrm.stats()
+        print(f"MRM: {s['opens']} opens, {s['disk_loads']} disk loads, "
+              f"device hits {s['device']['hits']}")
+    if server is not None:
+        server.stop()
+
+
+if __name__ == "__main__":
+    main()

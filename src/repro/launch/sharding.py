@@ -1,0 +1,221 @@
+"""Logical-axis sharding rules: parameter/optimizer/batch/cache PartitionSpecs.
+
+2-D layout (MaxText-style):
+  * ``tensor``  -> mesh axis "model": heads / ffn-hidden / experts / vocab
+  * ``fsdp``    -> mesh axes ("pod","data"): ZeRO-3 parameter+optimizer
+                   sharding along the data-parallel axes
+  * batch       -> ("pod","data")
+
+Rules are keyed on the leaf's dict name (names are a stable semantic contract
+of repro.models); leading layer-stack dimensions are padded with None
+automatically. Dimensions that do not divide by the axis size fall back to
+replication (e.g. kv-head counts below the TP degree).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.launch.mesh import batch_axes
+
+# leaf name -> (base_ndim, logical axes over trailing base dims)
+# "F" = fsdp, "T" = tensor, None = replicate
+_RULES: Dict[str, Tuple[int, Tuple[Optional[str], ...]]] = {
+    "embed": (2, ("T", "F")),
+    # attention
+    "wq": (2, ("F", "T")),
+    "wk": (2, ("F", "T")),
+    "wv": (2, ("F", "T")),
+    "wo": (2, ("T", "F")),
+    "bq": (1, ("T",)),
+    "bk": (1, ("T",)),
+    "bv": (1, ("T",)),
+    "q_norm": (1, (None,)),
+    "k_norm": (1, (None,)),
+    # dense mlp
+    "w_gate": (2, ("F", "T")),
+    "w_up": (2, ("F", "T")),
+    "w_down": (2, ("T", "F")),
+    # moe shared experts + router
+    "router": (2, ("F", None)),
+    "shared_gate": (2, ("F", "T")),
+    "shared_up": (2, ("F", "T")),
+    "shared_down": (2, ("T", "F")),
+    # mamba
+    "in_proj": (2, ("F", "T")),
+    "out_proj": (2, ("T", "F")),
+    "conv_w": (2, (None, "T")),
+    "conv_b": (1, ("T",)),
+    "A_log": (1, (None,)),
+    "D": (1, (None,)),
+    "dt_bias": (1, (None,)),
+    "out_norm": (1, ("T",)),
+    # norms / gates
+    "scale": (1, (None,)),
+    "bias": (1, (None,)),
+    "gate_attn": (0, ()),
+    "gate_mlp": (0, ()),
+}
+
+# routed expert tensors (E, D, F): expert-parallel over "model" + fsdp on the
+# FFN dim (not D): the per-expert hidden activation (C, F) then shards over
+# the data axes by propagation instead of living unsharded on every device.
+_MOE_RULES: Dict[str, Tuple[int, Tuple[Optional[str], ...]]] = {
+    "w_gate": (3, ("T", None, "F")),
+    "w_up": (3, ("T", None, "F")),
+    "w_down": (3, ("T", "F", None)),
+}
+
+
+def _axis(logical: Optional[str], mesh):
+    if logical is None:
+        return None
+    if logical == "T":
+        return "model" if "model" in mesh.axis_names else None
+    if logical == "F":
+        ax = batch_axes(mesh)
+        return ax if len(ax) > 1 else (ax[0] if ax else None)
+    raise ValueError(logical)
+
+
+def _axis_size(mesh, ax) -> int:
+    if ax is None:
+        return 1
+    if isinstance(ax, tuple):
+        return int(np.prod([mesh.shape[a] for a in ax]))
+    return mesh.shape[ax]
+
+
+def _spec_from_rule(rule, leaf, mesh) -> P:
+    base_ndim, logical = rule
+    n_stack = leaf.ndim - base_ndim
+    if n_stack < 0:
+        return P()
+    axes = [None] * n_stack + [_axis(l, mesh) for l in logical]
+    out = []
+    for dim, ax in zip(leaf.shape, axes):
+        # replicate dims that do not divide the axis size
+        out.append(ax if ax is not None and dim % _axis_size(mesh, ax) == 0
+                   else None)
+    return P(*out)
+
+
+def _leaf_name(path) -> str:
+    for entry in reversed(path):
+        if hasattr(entry, "key"):
+            return entry.key
+        if hasattr(entry, "name"):
+            return entry.name
+    return ""
+
+
+def _collect_moe_paths(tree) -> set:
+    """Paths of routed-expert leaves: siblings of a 'router' key."""
+    found = set()
+
+    def walk(path, node):
+        if isinstance(node, dict):
+            has_router = "router" in node
+            for k, v in node.items():
+                p = path + (k,)
+                if has_router and k in _MOE_RULES:
+                    found.add(p)
+                walk(p, v)
+
+    walk((), tree)
+    return found
+
+
+def make_param_specs(cfg: ModelConfig, params_shape, mesh):
+    moe_paths = _collect_moe_paths(params_shape)
+
+    def spec_for(path, leaf):
+        keys = tuple(e.key for e in path if hasattr(e, "key"))
+        name = _leaf_name(path)
+        if keys in moe_paths:
+            return _spec_from_rule(_MOE_RULES[name], leaf, mesh)
+        rule = _RULES.get(name)
+        if rule is None:
+            return P()  # replicate unknown leaves
+        return _spec_from_rule(rule, leaf, mesh)
+
+    return jax.tree_util.tree_map_with_path(spec_for, params_shape)
+
+
+def specs_to_shardings(specs, mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def make_param_shardings(cfg, params_shape, mesh):
+    return specs_to_shardings(make_param_specs(cfg, params_shape, mesh), mesh)
+
+
+def batch_spec(mesh) -> P:
+    ax = batch_axes(mesh)
+    return P(ax if len(ax) > 1 else (ax[0] if ax else None))
+
+
+def make_batch_shardings(batch_shape, mesh):
+    b = batch_spec(mesh)
+
+    def spec_for(path, leaf):
+        return NamedSharding(mesh, P(*((b[0],) + (None,) * (leaf.ndim - 1))))
+
+    return jax.tree_util.tree_map_with_path(spec_for, batch_shape)
+
+
+def cache_spec(path, leaf, mesh, batch_size: int) -> P:
+    """Decode-cache sharding: 2-D shard the big KV/state tensors.
+
+    Heuristics per leaf kind (names from repro.models.model):
+      k/v/xk/xv (..., B, T, K, hd): B->fsdp if divisible, else T->fsdp
+                                    (long-context batch=1); K->model if
+                                    divisible, else hd->model
+      ssm       (..., B, H, N, P):  B->fsdp; H->model
+      conv      (..., B, dc-1, ci): B->fsdp; ci->model
+    """
+    name = _leaf_name(path)
+    fsdp = _axis("F", mesh)
+    tensor = _axis("T", mesh)
+    fsdp_n = _axis_size(mesh, fsdp)
+    tensor_n = _axis_size(mesh, tensor)
+    shape = leaf.shape
+    spec = [None] * leaf.ndim
+
+    bdim = next((i for i, d in enumerate(shape) if d == batch_size), None)
+    if name in ("k", "v", "xk", "xv"):
+        tdim = (bdim + 1) if bdim is not None else None
+        kdim, hdim = leaf.ndim - 2, leaf.ndim - 1
+        if fsdp is not None and bdim is not None and shape[bdim] % fsdp_n == 0:
+            spec[bdim] = fsdp
+        elif fsdp is not None and tdim is not None and shape[tdim] % fsdp_n == 0:
+            spec[tdim] = fsdp
+        if tensor is not None:
+            if shape[kdim] % tensor_n == 0:
+                spec[kdim] = tensor
+            elif shape[hdim] % tensor_n == 0:
+                spec[hdim] = tensor
+    elif name == "ssm":
+        hdim = leaf.ndim - 3
+        if fsdp is not None and bdim is not None and shape[bdim] % fsdp_n == 0:
+            spec[bdim] = fsdp
+        if tensor is not None and shape[hdim] % tensor_n == 0:
+            spec[hdim] = tensor
+    elif name == "conv":
+        cdim = leaf.ndim - 1
+        if fsdp is not None and bdim is not None and shape[bdim] % fsdp_n == 0:
+            spec[bdim] = fsdp
+        if tensor is not None and shape[cdim] % tensor_n == 0:
+            spec[cdim] = tensor
+    return P(*spec)
+
+
+def make_cache_shardings(cache_shape, mesh, batch_size: int):
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: NamedSharding(mesh, cache_spec(p, l, mesh, batch_size)),
+        cache_shape)

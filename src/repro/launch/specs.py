@@ -1,0 +1,118 @@
+"""ShapeDtypeStruct stand-ins for every model input (dry-run lowering).
+
+Weak-type-correct, shardable, no device allocation — the shannon/kernels
+pattern. ``input_specs`` covers the lowered function's full argument list for
+each (architecture x shape-cell) kind.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import (ENCDEC, VLM, ModelConfig, ShapeCell)
+from repro.launch import sharding as shd
+from repro.launch.train_step import make_optimizer
+from repro.models import model as M
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_struct(cfg: ModelConfig, shape: ShapeCell, with_labels: bool = True
+                 ) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    out: Dict[str, Any] = {"tokens": sds((B, S), jnp.int32)}
+    if with_labels:
+        out["labels"] = sds((B, S), jnp.int32)
+    if cfg.family == VLM:
+        out["frontend"] = sds((B, cfg.n_frontend_tokens, cfg.d_model), jnp.float32)
+    elif cfg.family == ENCDEC:
+        out["frontend"] = sds((B, S, cfg.d_model), jnp.float32)
+    return out
+
+
+def params_struct(cfg: ModelConfig):
+    return jax.eval_shape(lambda k: M.init_params(cfg, k), jax.random.PRNGKey(0))
+
+
+def opt_struct(cfg: ModelConfig, params_shape):
+    opt_init, _ = make_optimizer(cfg)
+    return jax.eval_shape(opt_init, params_shape)
+
+
+def cache_struct(cfg: ModelConfig, shape: ShapeCell):
+    B, T = shape.global_batch, shape.seq_len
+    n_ctx = cfg.n_frontend_tokens if cfg.family == VLM else (
+        T if cfg.family == ENCDEC else None)
+    return jax.eval_shape(lambda: M.init_cache(cfg, B, T, n_ctx=n_ctx))
+
+
+def opt_shardings(cfg, opt_shape, param_shardings, mesh):
+    """Optimizer moments mirror parameter sharding; step is replicated."""
+    repl = NamedSharding(mesh, P())
+    return type(opt_shape)(step=repl,
+                           mu=jax.tree.map(lambda _, s: s, opt_shape.mu,
+                                           param_shardings),
+                           nu=jax.tree.map(lambda _, s: s, opt_shape.nu,
+                                           param_shardings))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeCell, mesh
+                ) -> Tuple[Tuple[Any, ...], Tuple[Any, ...], Any]:
+    """Returns (args, in_shardings, out_shardings) for the cell's step fn."""
+    pshape = params_struct(cfg)
+    psh = shd.make_param_shardings(cfg, pshape, mesh)
+    repl = NamedSharding(mesh, P())
+    baxes = shd.batch_spec(mesh)[0]
+
+    if shape.kind == "train":
+        bshape = batch_struct(cfg, shape)
+        bsh = shd.make_batch_shardings(bshape, mesh)
+        oshape = opt_struct(cfg, pshape)
+        osh = opt_shardings(cfg, oshape, psh, mesh)
+        metrics_sh = {k: repl for k in
+                      ("loss", "aux_loss", "perplexity", "grad_norm", "lr",
+                       "total_loss")}
+        return ((pshape, oshape, bshape), (psh, osh, bsh),
+                (psh, osh, metrics_sh))
+
+    model_ax = "model" if "model" in mesh.axis_names else None
+    vocab_ax = (model_ax if model_ax and
+                cfg.vocab_size % _axes_size(mesh, model_ax) == 0 else None)
+    batch_ax = (baxes if shape.global_batch %
+                _axes_size(mesh, baxes) == 0 else None)
+
+    if shape.kind == "prefill":
+        bshape = batch_struct(cfg, shape, with_labels=False)
+        bsh = shd.make_batch_shardings(bshape, mesh)
+        cshape = cache_struct(cfg, shape)
+        csh = shd.make_cache_shardings(cshape, mesh, shape.global_batch)
+        logits_sh = NamedSharding(mesh, P(batch_ax, vocab_ax))
+        return ((pshape, bshape), (psh, bsh), (logits_sh, csh))
+
+    if shape.kind == "decode":
+        cshape = cache_struct(cfg, shape)
+        csh = shd.make_cache_shardings(cshape, mesh, shape.global_batch)
+        token = sds((shape.global_batch,), jnp.int32)
+        pos = sds((), jnp.int32)
+        token_sh = NamedSharding(mesh, P(batch_ax))
+        logits_sh = NamedSharding(mesh, P(batch_ax, vocab_ax))
+        return ((pshape, cshape, token, pos), (psh, csh, token_sh, repl),
+                (logits_sh, csh))
+
+    raise ValueError(shape.kind)
+
+
+def _axes_size(mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, tuple):
+        out = 1
+        for a in axes:
+            out *= mesh.shape[a]
+        return out
+    return mesh.shape[axes]

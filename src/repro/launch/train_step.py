@@ -1,0 +1,84 @@
+"""Sharded train/serve step factories (pure functions; loops live in
+launch/train.py and serving/engine.py)."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+from repro.optim import adamw, warmup_cosine
+
+
+def make_optimizer(cfg: ModelConfig, peak_lr: float = 3e-4,
+                   warmup: int = 100, total: int = 10_000):
+    return adamw(warmup_cosine(peak_lr, warmup, total),
+                 moment_dtype=cfg.opt_moment_dtype)
+
+
+def make_train_step(cfg: ModelConfig, opt_update):
+    """(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    ``cfg.grad_accum > 1`` splits the global batch into microbatches and
+    accumulates gradients across a ``lax.scan`` — per-device activation
+    memory scales down by the accumulation factor while the optimizer sees
+    the same effective batch. The accumulator uses ``cfg.opt_moment_dtype``
+    (fp32 default; bf16 for the >100B configs where the fp32 buffer alone
+    would blow the HBM budget).
+    """
+    accum = max(1, cfg.grad_accum)
+
+    def grad_of(params, mb):
+        return jax.value_and_grad(
+            lambda p: M.loss_fn(cfg, p, mb), has_aux=True)(params)
+
+    def train_step(params, opt_state, batch):
+        if accum == 1:
+            (loss, metrics), grads = grad_of(params, batch)
+        else:
+            adt = jnp.dtype(cfg.opt_moment_dtype)
+            mbatch = jax.tree.map(
+                lambda x: x.reshape(accum, x.shape[0] // accum, *x.shape[1:]),
+                batch)
+
+            def body(carry, mb):
+                gsum, lsum, msum = carry
+                (loss, metrics), g = grad_of(params, mb)
+                gsum = jax.tree.map(lambda a, b: a + b.astype(adt), gsum, g)
+                return (gsum, lsum + loss,
+                        jax.tree.map(lambda a, b: a + b, msum, metrics)), None
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, adt), params)
+            m0 = {"loss": jnp.zeros((), jnp.float32),
+                  "aux_loss": jnp.zeros((), jnp.float32),
+                  "perplexity": jnp.zeros((), jnp.float32)}
+            (gsum, lsum, msum), _ = jax.lax.scan(
+                body, (zeros, jnp.zeros((), jnp.float32), m0), mbatch)
+            # keep the averaged grads in the accumulator dtype — the optimizer
+            # upcasts per-leaf; materializing a second full fp32 tree costs
+            # 4 bytes/param of peak HBM on the >100B configs
+            grads = jax.tree.map(lambda g: g / accum, gsum)
+            loss = lsum / accum
+            metrics = jax.tree.map(lambda v: v / accum, msum)
+        new_params, new_opt, opt_metrics = opt_update(grads, opt_state, params)
+        return new_params, new_opt, {**metrics, **opt_metrics,
+                                     "total_loss": loss}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, max_len: int):
+    def prefill_step(params, batch):
+        return M.prefill(cfg, params, batch, max_len)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    def serve_step(params, cache, token, pos):
+        return M.decode_step(cfg, params, cache, token, pos)
+
+    return serve_step

@@ -1,0 +1,6 @@
+from repro.runtime.compression import (  # noqa: F401
+    make_compressed_grad_fn, quantized_allreduce, tree_quantized_allreduce,
+)
+from repro.runtime.fault import (  # noqa: F401
+    FailureInjector, SimulatedFailure, Watchdog, run_with_restarts,
+)

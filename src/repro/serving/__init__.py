@@ -1,0 +1,5 @@
+from repro.serving.engine import (  # noqa: F401
+    FRAMEWORK, InferenceEngine, Request, RequestStats, ServableModel,
+    ServingWorkers, arch_signature, publish_model,
+)
+from repro.serving.weights_io import flat_to_params, params_to_flat  # noqa: F401

@@ -1,0 +1,253 @@
+"""Inference engine: the FaaS-side consumer of TrIMS.
+
+The engine executes prediction requests against models resolved through the
+TrIMS client (warm path) or a cold disk load (the baseline every benchmark
+compares against). Beyond the paper, the engine extends the MRM idea to the
+OTHER TPU cold-start term: compiled executables are cached keyed by
+(architecture-signature, batch, seq) — two models with identical topology
+share one XLA program, exactly like weights share one HBM copy.
+
+Latency accounting per request mirrors paper Fig. 1/9:
+  model_load_s (disk+deserialize+H2D | share), compile_s, compute_s.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.client import LoadedModel, TrimsClient, cold_load, free_model
+from repro.core.mrm import MRM, ModelKey
+from repro.core.store import DiskStore
+from repro.models import model as M
+from repro.serving.weights_io import (flat_to_params, flat_to_params_like,
+                                      params_to_flat)
+
+FRAMEWORK = "repro-jax"
+
+
+def arch_signature(cfg: ModelConfig) -> str:
+    payload = json.dumps(dataclasses.asdict(cfg), sort_keys=True, default=str)
+    return hashlib.sha1(payload.encode()).hexdigest()[:16]
+
+
+def publish_model(disk: DiskStore, cfg: ModelConfig, params,
+                  name: Optional[str] = None, version: str = "1") -> ModelKey:
+    """Serialize a params tree into the store (deploy path / train export)."""
+    key = ModelKey(FRAMEWORK, name or cfg.name, version)
+    disk.put(key, params_to_flat(params),
+             meta={"config": dataclasses.asdict(cfg)})
+    return key
+
+
+@dataclass
+class ServableModel:
+    key: ModelKey
+    cfg: ModelConfig
+    params: Any
+    loaded: LoadedModel
+    nbytes: int
+
+
+@dataclass
+class RequestStats:
+    model: str
+    cold: bool
+    tier_hit: str
+    model_load_s: float
+    compile_s: float
+    compute_s: float
+    total_s: float
+    modeled_load_s: float = 0.0
+
+
+class InferenceEngine:
+    def __init__(self, disk: DiskStore, mrm: Optional[MRM] = None,
+                 use_trims: bool = True,
+                 prefix_cache_bytes: int = 0):
+        self.disk = disk
+        self.mrm = mrm
+        self.use_trims = use_trims and mrm is not None
+        self.trims = TrimsClient(mrm, "engine") if self.use_trims else None
+        self._exe_cache: Dict[Tuple[str, str, int, int], Any] = {}
+        self._cfg_cache: Dict[str, ModelConfig] = {}
+        self._lock = threading.RLock()
+        self.stats: List[RequestStats] = []
+        self.exe_cache_hits = 0
+        self.exe_cache_misses = 0
+        self.prefix_kv = None
+        if prefix_cache_bytes > 0:
+            from repro.serving.prefix_cache import PrefixKVStore
+            self.prefix_kv = PrefixKVStore(prefix_cache_bytes)
+
+    # ------------------------------------------------------------- loading
+    def _config_for(self, key: ModelKey) -> ModelConfig:
+        mf = self.disk.open(key)
+        raw = dict(mf.meta["config"])
+        return ModelConfig(**raw)
+
+    def load_model(self, name: str, version: str = "1"
+                   ) -> Tuple[ServableModel, float]:
+        """Resolve weights (TrIMS or cold) -> params tree. Returns
+        (model, load_seconds)."""
+        key = ModelKey(FRAMEWORK, name, version)
+        cfg = self._cfg_cache.get(name) or self._config_for(key)
+        self._cfg_cache[name] = cfg
+        t0 = time.perf_counter()
+        if self.use_trims:
+            h = self.trims.open(FRAMEWORK, name, version)
+            loaded = LoadedModel(key, h.weights, h.nbytes, h.timings,
+                                 via_trims=True, handle=h)
+        else:
+            loaded = cold_load(self.disk, key)
+        load_s = time.perf_counter() - t0
+        template = jax.eval_shape(
+            lambda k: M.init_params(cfg, k), jax.random.PRNGKey(0))
+        params = flat_to_params_like(
+            template, loaded.weights,
+            convert=lambda v: v if hasattr(v, "devices") else jnp.asarray(v))
+        return ServableModel(key, cfg, params, loaded, loaded.nbytes), load_s
+
+    def release(self, sm: ServableModel):
+        free_model(sm.loaded, self.trims)
+
+    # ------------------------------------------------------------- compile
+    def _executable(self, sm: ServableModel, kind: str, B: int, S: int,
+                    max_len: int) -> Tuple[Any, float]:
+        """Executable cache keyed by topology signature, NOT model name —
+        same-architecture models share one compiled program."""
+        sig = (arch_signature(sm.cfg), kind, B, S)
+        with self._lock:
+            exe = self._exe_cache.get(sig)
+        if exe is not None:
+            self.exe_cache_hits += 1
+            return exe, 0.0
+        self.exe_cache_misses += 1
+        cfg = sm.cfg
+        t0 = time.perf_counter()
+        if kind == "prefill":
+            exe = jax.jit(lambda p, b: M.prefill(cfg, p, b, max_len))
+        elif kind == "decode":
+            exe = jax.jit(lambda p, c, t, pos: M.decode_step(cfg, p, c, t, pos))
+        else:
+            exe = jax.jit(lambda p, b: M.forward(cfg, p, b)[0])
+        compile_s = time.perf_counter() - t0  # trace cost; XLA compile on 1st call
+        with self._lock:
+            self._exe_cache[sig] = exe
+        return exe, compile_s
+
+    # --------------------------------------------------------------- infer
+    def generate(self, name: str, tokens: np.ndarray, max_new_tokens: int = 8,
+                 version: str = "1") -> Tuple[np.ndarray, RequestStats]:
+        """Prefill + greedy decode. tokens: (B, S) int32."""
+        t_start = time.perf_counter()
+        sm, load_s = self.load_model(name, version)
+        B, S = tokens.shape
+        max_len = S + max_new_tokens
+        exe_p, c1 = self._executable(sm, "prefill", B, S, max_len)
+        exe_d, c2 = self._executable(sm, "decode", B, 1, max_len)
+
+        t0 = time.perf_counter()
+        batch = {"tokens": jnp.asarray(tokens, jnp.int32)}
+        if sm.cfg.family in ("vlm", "encdec"):
+            batch["frontend"] = jnp.zeros(
+                (B, sm.cfg.n_frontend_tokens or S, sm.cfg.d_model), jnp.float32)
+        pkey = None
+        hit = None
+        if self.prefix_kv is not None:
+            from repro.serving.prefix_cache import prompt_key
+            pkey = prompt_key(name, tokens, max_len)
+            hit = self.prefix_kv.lookup(pkey)
+        if hit is not None:
+            logits, cache = hit  # immutable jax arrays: zero-copy share
+        else:
+            logits, cache = exe_p(sm.params, batch)
+            if self.prefix_kv is not None:
+                self.prefix_kv.insert(pkey, logits, cache,
+                                      time.perf_counter() - t0)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        out = [tok]
+        for i in range(max_new_tokens - 1):
+            logits, cache = exe_d(sm.params, cache, tok, jnp.int32(S + i))
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            out.append(tok)
+        result = np.asarray(jnp.stack(out, axis=1))
+        compute_s = time.perf_counter() - t0
+
+        tm = sm.loaded.timings
+        st = RequestStats(
+            model=name, cold=not sm.loaded.via_trims or tm.tier_hit != "device",
+            tier_hit=tm.tier_hit, model_load_s=load_s,
+            compile_s=c1 + c2, compute_s=compute_s,
+            total_s=time.perf_counter() - t_start,
+            modeled_load_s=tm.modeled_total())
+        self.stats.append(st)
+        self.release(sm)
+        return result, st
+
+
+# ---------------------------------------------------------------------------
+# request queue + batching (workload-modeling harness, paper Fig. 11)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class Request:
+    model: str
+    tokens: np.ndarray
+    max_new: int = 4
+    submitted: float = field(default_factory=time.perf_counter)
+    done: Optional[threading.Event] = None
+    result: Any = None
+    stats: Optional[RequestStats] = None
+
+
+class ServingWorkers:
+    """N concurrent workers draining a shared queue — the paper's
+    'concurrency level'."""
+
+    def __init__(self, engine: InferenceEngine, n_workers: int = 4):
+        self.engine = engine
+        self.n_workers = n_workers
+        import queue as _q
+        self.q: "_q.Queue[Optional[Request]]" = _q.Queue()
+        self.threads = [threading.Thread(target=self._run, daemon=True)
+                        for _ in range(n_workers)]
+        for t in self.threads:
+            t.start()
+
+    def submit(self, req: Request) -> Request:
+        req.done = threading.Event()
+        self.q.put(req)
+        return req
+
+    def _run(self):
+        while True:
+            req = self.q.get()
+            if req is None:
+                return
+            try:
+                req.result, req.stats = self.engine.generate(
+                    req.model, req.tokens, req.max_new)
+            except Exception as e:  # noqa: BLE001
+                req.result = e
+            finally:
+                req.done.set()
+
+    def drain(self, reqs: List[Request], timeout: float = 600.0):
+        for r in reqs:
+            r.done.wait(timeout)
+
+    def stop(self):
+        for _ in self.threads:
+            self.q.put(None)
+        for t in self.threads:
+            t.join(timeout=5)

@@ -1,0 +1,51 @@
+"""Params tree <-> flat named tensors (the .trims wire format).
+
+Model parameter trees are nested dicts (a repro.models invariant), so the
+path string "layers/attn/wq" reconstructs the tree exactly.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import numpy as np
+
+
+def params_to_flat(params) -> Dict[str, np.ndarray]:
+    flat = {}
+
+    def walk(prefix, node):
+        if isinstance(node, dict):
+            for k in sorted(node):
+                walk(f"{prefix}/{k}" if prefix else k, node[k])
+        else:
+            flat[prefix] = np.asarray(node)
+
+    walk("", params)
+    return flat
+
+
+def flat_to_params(flat: Dict[str, Any]):
+    root: Dict[str, Any] = {}
+    for path, v in flat.items():
+        keys = path.split("/")
+        node = root
+        for k in keys[:-1]:
+            node = node.setdefault(k, {})
+        node[keys[-1]] = v
+    return root
+
+
+def flat_to_params_like(template, flat: Dict[str, Any], convert=None):
+    """Rebuild into ``template``'s exact structure (keeps empty subtrees —
+    e.g. non-parametric norms — that a bare unflatten would drop)."""
+    convert = convert or (lambda x: x)
+
+    def fill(prefix, node):
+        if isinstance(node, dict):
+            return {k: fill(f"{prefix}/{k}" if prefix else k, v)
+                    for k, v in node.items()}
+        if prefix not in flat:
+            raise KeyError(f"missing weight {prefix!r}")
+        return convert(flat[prefix])
+
+    return fill("", template)

@@ -1,0 +1,82 @@
+"""Dry-run machinery on a small fake-device mesh (subprocess-isolated so the
+forced device count never leaks into other tests). The full 512-chip sweep
+runs via ``python -m repro.launch.dryrun --all --both-meshes`` (artifacts in
+benchmarks/artifacts/dryrun); here we prove the lower+compile path, sharding
+rules, donation and analysis capture on an 8-device mesh for one arch per
+family.
+"""
+import json
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+PROBE = textwrap.dedent("""
+    import os, json, sys
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    sys.path.insert(0, "src")
+    import jax
+    from jax.sharding import AxisType
+    import repro.launch.dryrun as dr
+    import repro.launch.mesh as mesh_mod
+
+    # shrink the production mesh to the fake-device budget
+    def small_mesh(*, multi_pod=False):
+        shape = (2, 2, 2) if multi_pod else (2, 4)
+        axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+        return jax.make_mesh(shape, axes,
+                             axis_types=(AxisType.Auto,) * len(axes))
+    dr.make_production_mesh = small_mesh
+
+    from repro.configs import get_config, SHAPES_BY_NAME
+    import repro.configs.registry as reg
+
+    arch, shape, mp = sys.argv[1], sys.argv[2], sys.argv[3] == "mp"
+    # reduced-but-shardable config: dims divisible by the small mesh
+    cfg = get_config(arch).reduced().replace(
+        d_model=64, n_heads=4, n_kv_heads=4, d_head=16, d_ff=128,
+        vocab_size=512, grad_accum=1)
+    reg.ARCHS[arch] = cfg
+    # shrink the shapes too
+    from repro.configs import base
+    import repro.launch.dryrun as dmod
+    small = {
+        "train_4k": base.ShapeCell("train_4k", 128, 8, "train"),
+        "prefill_32k": base.ShapeCell("prefill_32k", 256, 4, "prefill"),
+        "decode_32k": base.ShapeCell("decode_32k", 256, 8, "decode"),
+        "long_500k": base.ShapeCell("long_500k", 1024, 1, "decode"),
+    }
+    base.SHAPES_BY_NAME.update(small)
+    rec = dr.run_cell(arch, shape, mp)
+    print(json.dumps({"ok": rec.get("ok"), "skipped": rec.get("skipped", False),
+                      "coll": rec.get("hlo_analysis", {}).get("total_coll_bytes", 0),
+                      "peak": rec.get("per_device", {}).get("peak_hbm_bytes", 0),
+                      "err": rec.get("error")}))
+""")
+
+CASES = [
+    ("olmo-1b", "train_4k", "sp"),
+    ("qwen3-moe-30b-a3b", "train_4k", "sp"),
+    ("mamba2-370m", "decode_32k", "sp"),
+    ("jamba-1.5-large-398b", "long_500k", "sp"),
+    ("seamless-m4t-large-v2", "prefill_32k", "sp"),
+    ("llama-3.2-vision-90b", "decode_32k", "sp"),
+    ("olmo-1b", "train_4k", "mp"),        # multi-pod axis shards
+    ("deepseek-7b", "long_500k", "sp"),   # inapplicable -> SKIP
+]
+
+
+@pytest.mark.parametrize("arch,shape,mesh", CASES)
+def test_dryrun_cell_small_mesh(arch, shape, mesh):
+    out = subprocess.run([sys.executable, "-c", PROBE, arch, shape, mesh],
+                         cwd="/root/repo", capture_output=True, text=True,
+                         timeout=420)
+    assert out.returncode == 0, out.stderr[-2000:]
+    r = json.loads(out.stdout.strip().splitlines()[-1])
+    assert r["ok"], r["err"]
+    if arch == "deepseek-7b" and shape == "long_500k":
+        assert r["skipped"]
+    else:
+        assert not r["skipped"]
+        assert r["peak"] > 0

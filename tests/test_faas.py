@@ -1,0 +1,133 @@
+"""FaaS platform: container isolation, transparent sharing, pipelines, router."""
+import numpy as np
+import pytest
+
+from repro.core import (DiskStore, FaaSPlatform, IsolationError, MRM,
+                        ModelKey, Router)
+
+MB = 1 << 20
+
+
+def _tensors(nbytes=1 * MB, n=4, seed=0):
+    rng = np.random.default_rng(seed)
+    per = nbytes // n // 4
+    return {f"w{i}": rng.standard_normal(per).astype(np.float32) for i in range(n)}
+
+
+@pytest.fixture
+def platform(tmp_path):
+    disk = DiskStore(str(tmp_path / "disk"))
+    for name, seed in (("alexnet", 1), ("scene", 2), ("tts", 3)):
+        disk.put(ModelKey("jax", name), _tensors(seed=seed))
+    mrm = MRM(disk, device_capacity=64 * MB, host_capacity=256 * MB)
+    return FaaSPlatform(mrm)
+
+
+def test_sharing_across_containers(platform):
+    """Two isolated functions using the same model trigger ONE load."""
+    def fn(ctx, payload):
+        m = ctx.load_model("jax", "alexnet")
+        return float(np.asarray(m.weights["w0"]).sum())
+
+    platform.deploy("user_a", fn)
+    platform.deploy("user_b", fn)
+    ra = platform.invoke("user_a")
+    rb = platform.invoke("user_b")
+    assert ra == rb
+    stats = platform.mrm.stats()
+    assert stats["disk_loads"] == 1          # folded private copies into one
+    assert platform.mrm.refcount(ModelKey("jax", "alexnet")) == 2
+
+
+def test_isolation_entitlements(platform):
+    def sneaky(ctx, payload):
+        return ctx.load_model("jax", "scene")  # not in allowlist
+
+    platform.deploy("restricted", sneaky, allowed_models=[("jax", "alexnet")])
+    with pytest.raises(IsolationError):
+        platform.invoke("restricted")
+
+
+def test_handles_do_not_cross_containers(platform):
+    captured = {}
+
+    def fn_a(ctx, payload):
+        captured["model"] = ctx.load_model("jax", "alexnet")
+        captured["ctx"] = ctx
+        return None
+
+    def fn_b(ctx, payload):
+        # container B never loaded this model: ownership check must fail
+        return ctx.owns(captured["model"])
+
+    platform.deploy("a", fn_a)
+    platform.deploy("b", fn_b)
+    platform.invoke("a")
+    assert captured["ctx"].owns(captured["model"])
+    assert platform.invoke("b") is False
+
+
+def test_pipeline_and_cold_vs_warm(platform):
+    def stage1(ctx, payload):
+        m = ctx.load_model("jax", "alexnet")
+        return payload + ["alexnet"]
+
+    def stage2(ctx, payload):
+        m = ctx.load_model("jax", "scene")
+        return payload + ["scene"]
+
+    platform.deploy("s1", stage1)
+    platform.deploy("s2", stage2)
+    out = platform.invoke_pipeline(["s1", "s2"], [])
+    assert out == ["alexnet", "scene"]
+    cold = (platform.containers["s1"].acct.latencies[0]
+            + platform.containers["s2"].acct.latencies[0])
+    out = platform.invoke_pipeline(["s1", "s2"], [])
+    warm = (platform.containers["s1"].acct.latencies[1]
+            + platform.containers["s2"].acct.latencies[1])
+    assert warm <= cold
+
+
+def test_teardown_releases_refs(platform):
+    def fn(ctx, payload):
+        ctx.load_model("jax", "alexnet")
+
+    platform.deploy("f", fn)
+    platform.invoke("f")
+    assert platform.mrm.refcount(ModelKey("jax", "alexnet")) == 1
+    platform.undeploy("f")
+    assert platform.mrm.refcount(ModelKey("jax", "alexnet")) == 0
+
+
+def test_router_affinity(tmp_path):
+    nodes = []
+    for i in range(2):
+        disk = DiskStore(str(tmp_path / f"disk{i}"))
+        disk.put(ModelKey("jax", "m"), _tensors(seed=i))
+        mrm = MRM(disk, device_capacity=64 * MB)
+        node = FaaSPlatform(mrm, name=f"node{i}")
+        node.deploy("f", lambda ctx, p: ctx.load_model("jax", "m").nbytes)
+        nodes.append(node)
+    router = Router(nodes)
+    # first call lands somewhere; subsequent calls needing the same model
+    # must stick to the warm node
+    router.invoke("f", needed_models=[("jax", "m", "1")])
+    warm_node = max(nodes, key=lambda n: len(n.advertised_models()))
+    target = router.route("f", [("jax", "m", "1")])
+    assert target is warm_node
+
+
+def test_no_trims_fallback_counts_cold_starts(tmp_path):
+    disk = DiskStore(str(tmp_path / "disk"))
+    disk.put(ModelKey("jax", "m"), _tensors())
+    platform = FaaSPlatform(mrm=None, disk=disk)
+
+    def fn(ctx, payload):
+        m = ctx.load_model("jax", "m")
+        ctx.unload_model(m)  # private copy destroyed at request end
+        return None
+
+    platform.deploy("f", fn, use_trims=False)
+    platform.invoke("f")
+    platform.invoke("f")
+    assert platform.containers["f"].acct.cold_starts == 2

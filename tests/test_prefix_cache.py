@@ -1,0 +1,74 @@
+"""Prefix-KV sharing (beyond-paper: TrIMS applied to prefill results)."""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs import get_config
+from repro.core import DiskStore, MRM
+from repro.models import init_params
+from repro.serving import InferenceEngine, publish_model
+from repro.serving.prefix_cache import PrefixKVStore, prompt_key
+
+
+@pytest.fixture(scope="module")
+def engine(tmp_path_factory):
+    tmp = tmp_path_factory.mktemp("prefix")
+    disk = DiskStore(str(tmp / "models"))
+    cfg = get_config("olmo-1b").reduced().replace(n_layers=2)
+    publish_model(disk, cfg, init_params(cfg, jax.random.PRNGKey(0)),
+                  name="olmo-1b")
+    return InferenceEngine(disk, MRM(disk, device_capacity=1 << 30),
+                           prefix_cache_bytes=256 << 20)
+
+
+def test_same_prompt_skips_prefill_and_matches(engine):
+    toks = np.arange(1, 17, dtype=np.int32)[None, :]
+    out1, _ = engine.generate("olmo-1b", toks, max_new_tokens=4)
+    assert engine.prefix_kv.misses == 1
+    out2, _ = engine.generate("olmo-1b", toks, max_new_tokens=4)
+    assert engine.prefix_kv.hits == 1
+    np.testing.assert_array_equal(out1, out2)   # shared prefill, same result
+
+
+def test_different_prompt_misses(engine):
+    toks = np.arange(20, 36, dtype=np.int32)[None, :]
+    engine.generate("olmo-1b", toks, max_new_tokens=2)
+    assert engine.prefix_kv.misses >= 2
+
+
+def test_shared_cache_not_mutated_by_decodes(engine):
+    """Two decodes from one shared prefill must not interfere (functional
+    purity = the isolation guarantee)."""
+    toks = np.arange(40, 56, dtype=np.int32)[None, :]
+    out_a, _ = engine.generate("olmo-1b", toks, max_new_tokens=6)
+    key = [k for k in engine.prefix_kv.tier.entries if "olmo" in k][-1]
+    snap = jax.tree.map(lambda x: np.asarray(x).copy(),
+                        engine.prefix_kv.tier.entries[key].payload[1])
+    out_b, _ = engine.generate("olmo-1b", toks, max_new_tokens=6)
+    np.testing.assert_array_equal(out_a, out_b)
+    after = engine.prefix_kv.tier.entries[key].payload[1]
+    for a, b in zip(jax.tree.leaves(snap), jax.tree.leaves(after)):
+        np.testing.assert_array_equal(a, np.asarray(b))
+
+
+def test_store_capacity_eviction():
+    store = PrefixKVStore(capacity_bytes=100)
+    big = {"k": jax.numpy.zeros((10, 4), jax.numpy.float32)}  # 160B > 100
+    store.insert("a", None, big)
+    assert store.lookup("a") is None  # larger than tier: served uncached
+    small = {"k": jax.numpy.zeros((5,), jax.numpy.float32)}   # 20B
+    store.insert("b", None, small)
+    store.insert("c", None, small)
+    assert store.lookup("b") is not None
+    assert store.lookup("c") is not None
+
+
+def test_prompt_key_distinct():
+    t1 = np.ones((1, 8), np.int32)
+    t2 = np.ones((1, 8), np.int32)
+    t3 = np.arange(8, dtype=np.int32)[None]
+    assert prompt_key("m", t1, 16) == prompt_key("m", t2, 16)
+    assert prompt_key("m", t1, 16) != prompt_key("m", t3, 16)
+    assert prompt_key("m", t1, 16) != prompt_key("m2", t1, 16)
+    assert prompt_key("m", t1, 16) != prompt_key("m", t1, 32)

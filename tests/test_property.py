@@ -1,0 +1,168 @@
+"""Property-based tests (hypothesis) on system invariants.
+
+Cache/MRM invariants:
+  I1: used_bytes == sum of resident entry sizes and never exceeds capacity
+  I2: refcounted entries are never evicted
+  I3: refcounts never go negative; open/close is balanced
+  I4: whatever the op sequence, a model's bytes read back unchanged
+
+Numerics invariants:
+  N1: chunked SSD == sequential-scan SSD oracle for any chunking
+  N2: MoE ragged and capacity paths agree when capacity is sufficient
+  N3: router combine weights sum to 1
+  N4: rho decision monotonicity
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import LRU, LCU, MRM, ModelKey, Tier, TierCache, DiskStore, rho
+from repro.core.cache import CapacityError
+from repro.core.sharing import SharingConstants
+
+MB = 1 << 20
+
+
+# ---------------------------------------------------------------- cache ops
+@st.composite
+def cache_ops(draw):
+    n_keys = draw(st.integers(2, 6))
+    ops = draw(st.lists(st.tuples(
+        st.sampled_from(["open", "close"]),
+        st.integers(0, n_keys - 1)), min_size=1, max_size=40))
+    sizes = draw(st.lists(st.integers(1, 8), min_size=n_keys, max_size=n_keys))
+    return ops, sizes
+
+
+@given(cache_ops(), st.sampled_from(["lru", "lcu", "fifo", "largest"]))
+@settings(max_examples=60, deadline=None)
+def test_tier_cache_invariants(ops_sizes, policy):
+    ops, sizes = ops_sizes
+    cap = 16
+    c = TierCache(Tier.DEVICE, cap, policy)
+    refs = {}
+    for op, k in ops:
+        key = f"m{k}"
+        if op == "open":
+            e = c.peek(key)
+            if e is None:
+                try:
+                    c.make_room(sizes[k])
+                except CapacityError:
+                    continue
+                e = c.insert(key, sizes[k])
+            e.refcount += 1
+            refs[key] = refs.get(key, 0) + 1
+        else:
+            e = c.peek(key)
+            if e is not None and e.refcount > 0:
+                e.refcount -= 1
+                refs[key] -= 1
+        # I1
+        assert c.used == sum(e.nbytes for e in c.entries.values())
+        assert c.used <= cap
+        # I2: referenced entries still resident
+        for kk, r in refs.items():
+            if r > 0:
+                assert c.peek(kk) is not None
+        # I3
+        assert all(e.refcount >= 0 for e in c.entries.values())
+
+
+@given(st.lists(st.tuples(st.sampled_from(["open", "close"]),
+                          st.integers(0, 3)), min_size=1, max_size=24),
+       st.sampled_from(["lru", "lcu"]))
+@settings(max_examples=20, deadline=None)
+def test_mrm_random_open_close(tmp_path_factory, ops, policy):
+    tmp = tmp_path_factory.mktemp("mrm")
+    disk = DiskStore(str(tmp / "d"))
+    expect = {}
+    for k in range(4):
+        t = {f"w{j}": np.full((1024,), k * 10 + j, np.float32) for j in range(3)}
+        disk.put(ModelKey("jax", f"m{k}"), t)
+        expect[k] = t
+    mrm = MRM(disk, device_capacity=40 * 1024, host_capacity=200 * 1024,
+              policy=policy)
+    open_handles = {}
+    for op, k in ops:
+        key = ModelKey("jax", f"m{k}")
+        if op == "open":
+            try:
+                h = mrm.open(key)
+            except CapacityError:
+                continue
+            open_handles.setdefault(k, []).append(h)
+            # I4: contents always correct regardless of tier transitions
+            np.testing.assert_array_equal(np.asarray(h.weights["w1"]),
+                                          expect[k]["w1"])
+        elif open_handles.get(k):
+            mrm.close(open_handles[k].pop())
+        # invariants
+        assert mrm.device.used <= mrm.device.capacity
+        assert mrm.host.used <= mrm.host.capacity
+        for kk, hs in open_handles.items():
+            if hs:
+                assert mrm.resident(ModelKey("jax", f"m{kk}"), Tier.DEVICE)
+    for hs in open_handles.values():
+        for h in hs:
+            mrm.close(h)
+    assert all(e.refcount == 0 for e in mrm.device.entries.values())
+
+
+# ---------------------------------------------------------------- SSD
+@given(st.integers(1, 2), st.sampled_from([8, 16, 32]),
+       st.sampled_from([4, 8, 16]), st.integers(0, 10_000))
+@settings(max_examples=20, deadline=None)
+def test_ssd_chunked_matches_reference(b, seqlen, chunk, seed):
+    from repro.models.mamba import ssd_chunked, ssd_reference
+    H, P, N = 2, 4, 8
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((b, seqlen, H, P)), jnp.float32)
+    dt = jax.nn.softplus(jnp.asarray(rng.standard_normal((b, seqlen, H)), jnp.float32))
+    A = -jnp.exp(jnp.asarray(rng.standard_normal((H,)), jnp.float32))
+    Bm = jnp.asarray(rng.standard_normal((b, seqlen, N)), jnp.float32)
+    Cm = jnp.asarray(rng.standard_normal((b, seqlen, N)), jnp.float32)
+    y1, s1 = ssd_chunked(x, dt, A, Bm, Cm, chunk)
+    y2, s2 = ssd_reference(x, dt, A, Bm, Cm)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------- MoE
+@given(st.integers(0, 1000))
+@settings(max_examples=10, deadline=None)
+def test_moe_ragged_vs_capacity(seed):
+    from repro.configs import get_config
+    from repro.models.moe import apply_moe, init_moe, router_topk
+    cfg = get_config("qwen3-moe-30b-a3b").reduced().replace(
+        n_experts=4, top_k=2, capacity_factor=4.0)  # capacity ample: no drops
+    p = init_moe(cfg, jax.random.PRNGKey(seed))
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (1, 16, cfg.d_model),
+                          jnp.float32)
+    out_r, aux_r = apply_moe(cfg.replace(moe_impl="ragged"), p, x)
+    out_c, aux_c = apply_moe(cfg.replace(moe_impl="capacity"), p, x)
+    np.testing.assert_allclose(np.asarray(out_r), np.asarray(out_c),
+                               rtol=2e-2, atol=2e-3)
+    np.testing.assert_allclose(float(aux_r), float(aux_c), rtol=1e-5)
+
+    # N3: router weights
+    topw, topi, aux = router_topk(cfg, p, x.reshape(-1, cfg.d_model))
+    np.testing.assert_allclose(np.asarray(jnp.sum(topw, -1), np.float32),
+                               1.0, rtol=1e-3)
+    assert float(aux) >= 1.0 - 1e-3  # aux lower bound at perfect balance
+
+
+# ---------------------------------------------------------------- rho
+@given(st.integers(1, 1 << 34), st.integers(1, 4096),
+       st.floats(1e-6, 1e-2), st.floats(1e-7, 1e-3), st.floats(1e6, 1e10))
+@settings(max_examples=100, deadline=None)
+def test_rho_properties(b, n, o, s, q):
+    c = SharingConstants(o=o, s=s, q=q)
+    # monotone increasing in b, decreasing in n
+    assert rho(b + 1024, n, c) >= rho(b, n, c)
+    assert rho(b, n + 1, c) <= rho(b, n, c)
+    # exact formula
+    np.testing.assert_allclose(rho(b, n, c), b / q - n * (o + s), rtol=1e-12)

@@ -1,0 +1,97 @@
+"""Unit tests for the sharding rule tables (no devices needed: specs only)."""
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.launch import sharding as shd
+from repro.launch.mesh import batch_axes
+from repro.launch.specs import batch_struct, cache_struct, params_struct
+from repro.configs.base import SHAPES_BY_NAME
+
+
+class FakeMesh:
+    """Duck-typed mesh: axis names + shape mapping (enough for spec rules)."""
+
+    def __init__(self, shape):
+        self.shape = dict(shape)
+        self.axis_names = tuple(shape)
+
+
+SP = FakeMesh({"data": 16, "model": 16})
+MP = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def _find(specs, *path):
+    node = specs
+    for k in path:
+        node = node[k]
+    return node
+
+
+def test_dense_param_specs_single_pod():
+    cfg = get_config("deepseek-7b")
+    specs = shd.make_param_specs(cfg, params_struct(cfg), SP)
+    # embedding: vocab->model, d->fsdp
+    assert _find(specs, "embed") == P("model", "data")
+    # stacked attention weights: (L, D, qd) -> (None, fsdp, tensor)
+    assert _find(specs, "layers", "attn", "wq") == P(None, "data", "model")
+    assert _find(specs, "layers", "attn", "wo") == P(None, "model", "data")
+    assert _find(specs, "layers", "ffn", "w_down") == P(None, "model", "data")
+    # norms replicate
+    assert _find(specs, "layers", "ln1", "scale") == P(None, None)  # stacked
+
+
+def test_dense_param_specs_multi_pod_fsdp_tuple():
+    cfg = get_config("deepseek-7b")
+    specs = shd.make_param_specs(cfg, params_struct(cfg), MP)
+    assert _find(specs, "layers", "attn", "wq") == P(None, ("pod", "data"), "model")
+
+
+def test_moe_expert_specs():
+    cfg = get_config("qwen3-moe-30b-a3b")
+    specs = shd.make_param_specs(cfg, params_struct(cfg), SP)
+    # routed experts (L, E, D, F): E->model, F->fsdp
+    assert _find(specs, "layers", "ffn", "w_gate") == P(None, "model", None, "data")
+    assert _find(specs, "layers", "ffn", "w_down") == P(None, "model", "data", None)
+    assert _find(specs, "layers", "ffn", "router") == P(None, "data", None)
+    # dense mlp rule NOT applied to expert tensors and vice versa
+    dense = get_config("deepseek-7b")
+    dspecs = shd.make_param_specs(dense, params_struct(dense), SP)
+    assert _find(dspecs, "layers", "ffn", "w_gate") == P(None, "data", "model")
+
+
+def test_non_divisible_dims_replicate():
+    # mamba2: vocab 50280 not divisible by 16 -> padded table IS divisible;
+    # A_log (nh,) replicates by rule
+    cfg = get_config("mamba2-370m")
+    specs = shd.make_param_specs(cfg, params_struct(cfg), SP)
+    assert _find(specs, "layers", "mamba", "A_log") == P(None, None)  # stacked
+    assert cfg.padded_vocab % 16 == 0
+    assert _find(specs, "embed") == P("model", "data")
+
+
+def test_cache_specs_decode():
+    cfg = get_config("qwen1.5-110b")
+    cs = cache_struct(cfg, SHAPES_BY_NAME["decode_32k"])
+    specs = jax.tree_util.tree_map_with_path(
+        lambda p, l: shd.cache_spec(p, l, SP, 128), cs)
+    # (L, B, T, K, hd): B=128 -> data; kv=8 not divisible by 16 -> hd->model
+    assert specs["attn"]["k"] == P(None, "data", None, None, "model")
+
+
+def test_cache_specs_long_context_batch1():
+    cfg = get_config("jamba-1.5-large-398b")
+    cs = cache_struct(cfg, SHAPES_BY_NAME["long_500k"])
+    specs = jax.tree_util.tree_map_with_path(
+        lambda p, l: shd.cache_spec(p, l, SP, 1), cs)
+    # batch=1 not shardable -> sequence dim takes the fsdp axis
+    k = specs["attn"]["k"]
+    assert k[2] == "data"            # 524288 % 16 == 0
+    # ssm states: heads on model
+    assert specs["mamba"]["ssm"][-3] == "model"
+
+
+def test_batch_spec():
+    assert shd.batch_spec(SP) == P("data")
+    assert shd.batch_spec(MP) == P(("pod", "data"))

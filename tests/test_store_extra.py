@@ -1,0 +1,83 @@
+"""Extra store/MRM coverage: cloud throttling, eager host release, LRU
+touch ordering through the MRM, store key listing."""
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import CloudStore, DiskStore, MRM, ModelKey, Tier
+
+MB = 1 << 20
+
+
+def _tensors(nbytes=1 * MB, n=2, seed=0):
+    rng = np.random.default_rng(seed)
+    per = nbytes // n // 4
+    return {f"w{i}": rng.standard_normal(per).astype(np.float32) for i in range(n)}
+
+
+def test_cloud_download_models_time_and_copies(tmp_path):
+    cloud = CloudStore(str(tmp_path / "cloud"), bw=100e6, rtt=5e-3,
+                       simulate_time=True)
+    disk = DiskStore(str(tmp_path / "disk"))
+    key = ModelKey("jax", "m")
+    cloud.put(key, _tensors(2 * MB))
+    t0 = time.perf_counter()
+    modeled, nbytes = cloud.download(key, disk)
+    wall = time.perf_counter() - t0
+    assert disk.contains(key)
+    assert modeled == pytest.approx(5e-3 + nbytes / 100e6, rel=1e-6)
+    # throttle sleeps toward the modeled time (capped at 0.25s)
+    assert wall >= min(modeled, 0.25) * 0.5
+    # bytes identical after the hop
+    out = disk.open(key).read_all(verify=True)
+    np.testing.assert_array_equal(out["w0"], _tensors(2 * MB)["w0"])
+
+
+def test_store_keys_listing(tmp_path):
+    disk = DiskStore(str(tmp_path / "d"))
+    disk.put(ModelKey("fw1", "a", "1"), _tensors())
+    disk.put(ModelKey("fw1", "b", "2"), _tensors())
+    disk.put(ModelKey("fw2", "c", "1"), _tensors())
+    keys = set(disk.keys())
+    assert keys == {("fw1", "a", "1"), ("fw1", "b", "2"), ("fw2", "c", "1")}
+
+
+def test_eager_reclaim_host_tier(tmp_path):
+    disk = DiskStore(str(tmp_path / "d"))
+    key = ModelKey("jax", "m")
+    disk.put(key, _tensors())
+    mrm = MRM(disk, device_capacity=64 * MB, host_capacity=64 * MB,
+              eager_reclaim=True)
+    h = mrm.open(key, tier="host")
+    assert mrm.resident(key, Tier.HOST)
+    mrm.close(h)
+    assert not mrm.resident(key, Tier.HOST)  # eager: dropped at zero refs
+
+
+def test_mru_protected_under_pressure(tmp_path):
+    """The most-recently-used model must survive an eviction pass."""
+    disk = DiskStore(str(tmp_path / "d"))
+    keys = []
+    for i in range(4):
+        k = ModelKey("jax", f"m{i}")
+        disk.put(k, _tensors(2 * MB, seed=i))
+        keys.append(k)
+    mrm = MRM(disk, device_capacity=5 * MB, host_capacity=64 * MB)
+    for k in keys[:2]:
+        mrm.close(mrm.open(k))
+    mrm.close(mrm.open(keys[0]))       # touch m0 -> MRU
+    mrm.close(mrm.open(keys[2]))       # forces eviction of LRU (m1)
+    assert mrm.resident(keys[0], Tier.DEVICE)
+    assert not mrm.resident(keys[1], Tier.DEVICE)
+
+
+def test_double_close_is_idempotent(tmp_path):
+    disk = DiskStore(str(tmp_path / "d"))
+    key = ModelKey("jax", "m")
+    disk.put(key, _tensors())
+    mrm = MRM(disk, device_capacity=64 * MB)
+    h = mrm.open(key)
+    mrm.close(h)
+    mrm.close(h)  # no-op, no negative refcount
+    assert mrm.refcount(key) == 0
