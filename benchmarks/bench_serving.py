@@ -20,7 +20,8 @@ from benchmarks.common import write_csv
 from repro.configs import get_config
 from repro.core import DiskStore, MRM
 from repro.models import init_params
-from repro.serving import InferenceEngine, publish_model
+from repro.serving import (InferenceEngine, Request, ServingWorkers,
+                           publish_model)
 
 ARCHS = ["olmo-1b", "deepseek-7b", "qwen3-moe-30b-a3b"]
 
@@ -66,6 +67,7 @@ def run(root=None, n_requests: int = 3, verbose=True):
                   f"{engine.exe_cache_misses} misses")
 
     write_csv("serving_e2e", rows)
+    # derived below; optional worker-lookahead ablation runs via main()
     # derived: steady-state (last request) load-time speedup per arch
     speedups = {}
     for arch in ARCHS:
@@ -78,5 +80,43 @@ def run(root=None, n_requests: int = 3, verbose=True):
     return rows, speedups
 
 
+def run_prefetch_ablation(root=None, n_rounds: int = 2, verbose=True):
+    """Worker lookahead-prefetch on/off: a single worker draining a mixed
+    queue either stages the next request's model during the current
+    request's compute, or pays the full load inline."""
+    root = root or tempfile.mkdtemp(prefix="trims_serving_pf_")
+    disk, _ = setup(root)
+    toks = np.random.default_rng(0).integers(0, 255, size=(1, 16)).astype(np.int32)
+    rows = []
+    for lookahead in (False, True):
+        mrm = MRM(disk, device_capacity=8 << 30, host_capacity=16 << 30)
+        engine = InferenceEngine(disk, mrm)
+        workers = ServingWorkers(engine, n_workers=1,
+                                 lookahead_prefetch=lookahead)
+        reqs = [workers.submit(Request(model=a, tokens=toks, max_new=2))
+                for _ in range(n_rounds) for a in ARCHS]
+        workers.drain(reqs)
+        workers.stop()
+        loads = [r.stats.model_load_s for r in reqs if r.stats is not None]
+        rows.append({"lookahead": lookahead,
+                     "mean_load_s": float(np.mean(loads)),
+                     "prefetches": mrm.metrics["prefetches"],
+                     "disk_loads": mrm.metrics["disk_loads"]})
+        if verbose:
+            print(f"  lookahead={lookahead!s:<5} "
+                  f"mean_load={rows[-1]['mean_load_s']*1e3:7.1f}ms "
+                  f"prefetches={rows[-1]['prefetches']}")
+    write_csv("serving_prefetch_ablation", rows)
+    return rows
+
+
 if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--ablate-prefetch", action="store_true",
+                    help="also compare worker lookahead prefetch on/off")
+    args = ap.parse_args()
     run()
+    if args.ablate_prefetch:
+        print("-- worker lookahead prefetch ablation --")
+        run_prefetch_ablation()

@@ -1,0 +1,18 @@
+#!/usr/bin/env bash
+# Tier-1 CI entry point.
+#
+#   scripts/ci.sh           full suite (the tier-1 command from ROADMAP.md)
+#   scripts/ci.sh --fast    skip tests marked `slow` (end-to-end train/serve
+#                           and subprocess-compile suites) for a quick gate
+#
+# Extra args are forwarded to pytest, e.g. `scripts/ci.sh -k demotion`.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+ARGS=(-x -q)
+if [[ "${1:-}" == "--fast" ]]; then
+    shift
+    ARGS+=(-m "not slow")
+fi
+exec python -m pytest "${ARGS[@]}" "$@"

@@ -5,13 +5,18 @@ cost model, cross-process shm IPC, FaaS isolation layer, proxy zoo.
 """
 from repro.core.cache import (  # noqa: F401
     CacheEntry, CapacityError, EvictionPolicy, FIFO, LCU, LRU, Largest,
-    POLICIES, Tier, TierCache,
+    POLICIES, Tier, TierCache, TierHierarchy,
 )
 from repro.core.client import (  # noqa: F401
     LoadedModel, TrimsClient, cold_load, free_model, load_model,
 )
 from repro.core.costmodel import HardwareModel, get_hardware  # noqa: F401
 from repro.core.faas import Container, FaaSPlatform, IsolationError, Router  # noqa: F401
-from repro.core.mrm import MRM, ModelHandle, ModelKey, OpenTimings  # noqa: F401
+from repro.core.mrm import (  # noqa: F401
+    LoadFuture, MRM, ModelHandle, ModelKey, OpenTimings,
+)
+from repro.core.pipeline import (  # noqa: F401
+    PipelineReport, plan_chunks, run_pipeline,
+)
 from repro.core.sharing import get_constants, plan_granularity, rho  # noqa: F401
 from repro.core.store import CloudStore, DiskStore, ModelFile, write_model  # noqa: F401

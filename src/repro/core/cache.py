@@ -179,3 +179,137 @@ class TierCache:
                 "evictions": self.evictions, "bytes_evicted": self.bytes_evicted,
                 "policy": self.policy.name,
             }
+
+
+class TierHierarchy:
+    """The DEVICE -> HOST -> DISK tier chain as one object (DESIGN.md §2).
+
+    Eviction is *demotion*: a victim pushed out of DEVICE is re-homed in the
+    HOST tier (via ``demote_fn``, which performs the D2H payload conversion)
+    instead of being dropped, so the next open is a host hit rather than a
+    disk reload. HOST victims simply fall back to disk — the store below
+    already holds every model, so releasing the payload *is* the demotion.
+    Demotion is best-effort: if the host tier cannot make room (everything
+    referenced/pinned) the victim is dropped, never an error.
+
+    Lock order is always DEVICE before HOST; ``make_room(DEVICE)`` nests the
+    host lock while demoting, and nothing acquires them in reverse.
+    """
+
+    def __init__(self, device: TierCache, host: TierCache,
+                 demote_fn=None, demote_on_evict: bool = True):
+        self.device = device
+        self.host = host
+        self.demote_fn = demote_fn
+        self.demote_on_evict = demote_on_evict
+        self.demotions = 0
+        self.bytes_demoted = 0
+        self.demotion_drops = 0
+
+    def cache(self, tier: Tier) -> TierCache:
+        if tier == Tier.DEVICE:
+            return self.device
+        if tier == Tier.HOST:
+            return self.host
+        raise KeyError(f"no cache for tier {tier}")
+
+    # -- eviction-as-demotion ----------------------------------------------
+    def make_room(self, tier: Tier, nbytes: int):
+        """``TierCache.make_room`` on ``tier``; HOST victims' payloads are
+        released (the disk tier below already holds them). DEVICE victims
+        are only evicted here — the caller demotes them with
+        :meth:`demote_evicted` AFTER dropping the device lock, so the D2H
+        payload copy never stalls other tier operations. Returns the
+        evicted entries; raises CapacityError exactly as the tier cache
+        does."""
+        cache = self.cache(tier)
+        with cache.lock:
+            evicted = cache.make_room(nbytes)
+            if tier == Tier.HOST:
+                for victim in evicted:
+                    payload = victim.payload
+                    victim.payload = None
+                    if payload is not None and hasattr(payload, "release"):
+                        payload.release()
+            return evicted
+
+    def demote_evicted(self, victims) -> list:
+        """Demote DEVICE victims into HOST; call with NO cache locks held.
+        Returns the entries that were actually copied down."""
+        return [v for v in victims if self._demote(v)]
+
+    def _demote(self, victim: CacheEntry) -> bool:
+        if (not self.demote_on_evict or self.demote_fn is None
+                or victim.payload is None):
+            return False
+        with self.host.lock:
+            held = self.host.peek(victim.key)
+            if held is not None:
+                # host still holds it — no copy needed, but the model was
+                # device-hot until this instant: refresh its recency so the
+                # host tier doesn't turn around and evict it next
+                held.touch()
+                return False
+            try:
+                # make room BEFORE paying for the copy: a doomed demotion
+                # (host can't fit the victim) must cost nothing
+                self.make_room(Tier.HOST, victim.nbytes)
+            except CapacityError:
+                self.demotion_drops += 1
+                return False
+        # D2H copy outside both cache locks: a multi-GB demotion must not
+        # block concurrent hits/stagings on either tier
+        payload = self.demote_fn(victim)
+        if payload is None:
+            self.demotion_drops += 1
+            return False
+        with self.host.lock:
+            if self.host.peek(victim.key) is not None:
+                # a concurrent load brought it back while we copied
+                if hasattr(payload, "release"):
+                    payload.release()
+                return False
+            try:
+                self.make_room(Tier.HOST, victim.nbytes)  # re-check: races
+                self.host.insert(victim.key, victim.nbytes, payload=payload)
+            except CapacityError:
+                self.demotion_drops += 1
+                if hasattr(payload, "release"):
+                    payload.release()
+                return False
+        self.demotions += 1
+        self.bytes_demoted += victim.nbytes
+        return True
+
+    # -- pinning ------------------------------------------------------------
+    def pin(self, key, tier: Tier = Tier.DEVICE) -> bool:
+        cache = self.cache(tier)
+        with cache.lock:
+            e = cache.peek(key)
+            if e is None:
+                return False
+            e.pinned = True
+            return True
+
+    def unpin(self, key, tier: Tier = Tier.DEVICE) -> bool:
+        cache = self.cache(tier)
+        with cache.lock:
+            e = cache.peek(key)
+            if e is None:
+                return False
+            e.pinned = False
+            return True
+
+    # -- queries ------------------------------------------------------------
+    def resident_tier(self, key) -> Optional[Tier]:
+        """Highest tier where ``key`` is resident with a live payload."""
+        for cache in (self.device, self.host):
+            e = cache.peek(key)
+            if e is not None and e.payload is not None:
+                return cache.tier
+        return None
+
+    def stats(self) -> dict:
+        return {"demotions": self.demotions,
+                "bytes_demoted": self.bytes_demoted,
+                "demotion_drops": self.demotion_drops}

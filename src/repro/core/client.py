@@ -57,6 +57,27 @@ class TrimsClient:
         self.open_handles[h.handle_id] = h
         return h
 
+    def open_async(self, framework: str, name: str, version: str = "1",
+                   activation_bytes: int = 0):
+        """Future-based open; ``result()`` yields the refcounted handle."""
+        key = ModelKey(framework, name, version)
+        fut = self.mrm.open_async(key, activation_bytes=activation_bytes)
+        fut.add_done_callback(self._track_async)
+        return fut
+
+    def _track_async(self, fut):
+        h = fut._result
+        # result() can wake the caller before this callback runs, so the
+        # handle may already be closed — tracking it then would leak it
+        if h is not None and not h.closed:
+            self.open_handles[h.handle_id] = h
+
+    def prefetch(self, framework: str, name: str, version: str = "1",
+                 tier: str = "device"):
+        """Warm-up hint: stage the model toward ``tier`` in the background
+        without taking a reference (paper §4.1 'models can be preloaded')."""
+        return self.mrm.prefetch(ModelKey(framework, name, version), tier=tier)
+
     def close(self, handle: ModelHandle):
         self.open_handles.pop(handle.handle_id, None)
         self.mrm.close(handle)

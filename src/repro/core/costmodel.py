@@ -10,6 +10,7 @@ I/O and deserialization are *measured*; both are reported separately.
 from __future__ import annotations
 
 import json
+import math
 import os
 import tempfile
 import time
@@ -22,6 +23,7 @@ HBM_BW = 819e9                 # B/s
 ICI_BW_PER_LINK = 50e9         # B/s per link
 H2D_BW = 32e9                  # B/s host->device staging (PCIe gen4 x16 class)
 HBM_BYTES = 16 * 2 ** 30       # 16 GiB HBM per v5e chip
+PIPELINE_CHUNK_BYTES = 4 << 20  # default staging chunk (DESIGN.md §4)
 
 
 @dataclass
@@ -51,6 +53,27 @@ class HardwareModel:
 
     def compute_time(self, flops: float) -> float:
         return flops / self.peak_flops
+
+    # -- staging models (DESIGN.md §4) -------------------------------------
+    def deserialize_time(self, nbytes: int) -> float:
+        """Unmarshal is memcpy-bound: bytes at the cached-read rate."""
+        return nbytes / self.cached_read_bw
+
+    def staging_serial_time(self, nbytes: int) -> float:
+        """Whole-model serial chain: disk read, then deserialize, then H2D."""
+        return (self.disk_time(nbytes) + self.deserialize_time(nbytes)
+                + self.h2d_time(nbytes))
+
+    def staging_pipelined_time(self, nbytes: int,
+                               chunk_bytes: int = PIPELINE_CHUNK_BYTES) -> float:
+        """Chunked pipeline: fill the pipe once, then pay max(stage) per
+        chunk — total = latency + sum(stage) + (n-1) * max(stage). Equals the
+        serial time at one chunk and is strictly below it for n >= 2."""
+        n = max(1, math.ceil(nbytes / max(1, chunk_bytes)))
+        per = nbytes / n
+        stages = (per / self.disk_bw, per / self.cached_read_bw,
+                  per / self.h2d_bw)
+        return self.disk_lat + sum(stages) + (n - 1) * max(stages)
 
 
 def measure(tmpdir: str | None = None, nbytes: int = 64 * 2 ** 20) -> HardwareModel:

@@ -79,6 +79,24 @@ class Container:
             self._models[key] = m
             return m
 
+    def prefetch_models(self, models: Sequence[Tuple[str, ...]]) -> list:
+        """Warm entitled models toward the device tier without taking refs.
+
+        Non-entitled or missing models are skipped (a warm-up hint must
+        never fail a deploy). Returns the LoadFutures issued."""
+        if self._trims is None:
+            return []
+        futs = []
+        for m in models:
+            fw, name = m[0], m[1]
+            version = m[2] if len(m) > 2 else "1"
+            if self.allowed is not None and (fw, name) not in self.allowed:
+                continue
+            if not self.platform.disk.contains(ModelKey(fw, name, version)):
+                continue
+            futs.append(self._trims.prefetch(fw, name, version))
+        return futs
+
     def unload_model(self, m: LoadedModel):
         with self._lock:
             self._models.pop(m.key, None)
@@ -118,13 +136,26 @@ class FaaSPlatform:
         self._lock = threading.RLock()
 
     def deploy(self, name: str, fn: Callable, allowed_models=None,
-               use_trims: bool = True) -> Container:
+               use_trims: bool = True, prewarm: bool = True) -> Container:
+        """Provision a function. With ``prewarm`` the platform prefetches the
+        function's declared models at deploy time — the platform, not the
+        tenant, owns load scheduling, so the first invocation finds its
+        weights already staged (or staging) instead of paying a cold chain."""
         spec = FunctionSpec(name, fn, allowed_models)
         with self._lock:
             self.functions[name] = spec
             c = Container(self, name, allowed_models, use_trims=use_trims)
             self.containers[name] = c
+        if prewarm and allowed_models:
+            c.prefetch_models(allowed_models)
         return c
+
+    def prefetch_models(self, keys: Sequence[ModelKey]) -> list:
+        """Node-level warm-up (router pre-dispatch hint)."""
+        if self.mrm is None:
+            return []
+        return [self.mrm.prefetch(ModelKey(*k)) for k in keys
+                if self.mrm.disk.contains(ModelKey(*k))]
 
     def undeploy(self, name: str):
         with self._lock:
@@ -180,4 +211,9 @@ class Router:
                    key=score)
 
     def invoke(self, fn_name: str, payload=None, needed_models=()):
-        return self.route(fn_name, needed_models).invoke(fn_name, payload)
+        """Route, issue prefetch for the needed models on the chosen node,
+        then dispatch — staging overlaps the dispatch/queueing latency."""
+        node = self.route(fn_name, needed_models)
+        if needed_models:
+            node.prefetch_models(needed_models)
+        return node.invoke(fn_name, payload)

@@ -1,19 +1,22 @@
-"""TrIMS Model Resource Manager (paper §4.1).
+"""TrIMS Model Resource Manager (paper §4.1, DESIGN.md §2-§4).
 
 The MRM is the daemon that owns the multi-tier model cache and abstracts
-model loading away from framework clients. ``open`` implements the Fig. 7
-state machine:
+model loading away from framework clients. ``open_async`` implements the
+Fig. 7 state machine as a :class:`LoadFuture`:
 
   DEVICE hit             -> refcount++, hand out shared device arrays
   DEVICE miss / HOST hit -> make room on device, stage host->device
-  HOST+DEVICE miss       -> disk (or cloud download), deserialize into
-                            host tier, then stage to device
+  HOST+DEVICE miss       -> disk (or cloud download), then a *chunked
+                            pipelined* disk->host->device staging chain
 
 Models are addressed by namespace ``(framework, name, version)``. Entries
 with live references are never evicted; concurrent opens of the same model
-coalesce into one load (thundering-herd dedup). Timings are recorded
-per-stage, both measured (real disk/deserialize work on this host) and
-modeled (TPU H2D at ``hw.h2d_bw``) — see DESIGN.md §2.
+coalesce onto one in-flight future (thundering-herd dedup). Eviction from
+the device tier *demotes* victims into the host tier (TierHierarchy) rather
+than dropping them, and ``prefetch`` warms a tier in the background without
+taking a reference. Timings are recorded per-stage, both measured (real
+disk/deserialize work on this host) and modeled (TPU H2D at ``hw.h2d_bw``)
+— see DESIGN.md §4 for the pipelined staging model.
 """
 from __future__ import annotations
 
@@ -25,9 +28,11 @@ from typing import Callable, Dict, NamedTuple, Optional
 
 import numpy as np
 
-from repro.core.cache import CapacityError, Tier, TierCache
-from repro.core.costmodel import HardwareModel, get_hardware
-from repro.core.store import CloudStore, DiskStore, ModelFile
+from repro.core.cache import Tier, TierCache, TierHierarchy
+from repro.core.costmodel import (HardwareModel, PIPELINE_CHUNK_BYTES,
+                                  get_hardware)
+from repro.core.pipeline import plan_chunks, run_pipeline
+from repro.core.store import CloudStore, DiskStore, ModelFile, _np_dtype
 
 
 class ModelKey(NamedTuple):
@@ -46,6 +51,12 @@ class OpenTimings:
     h2d_modeled_s: float = 0.0    # modeled TPU PCIe staging
     share_overhead_s: float = 0.0 # measured handle-creation overhead (o+s per object)
     total_s: float = 0.0
+    # pipelined-staging accounting (DESIGN.md §4)
+    chunks: int = 0               # staging chunks this open flowed through
+    stage_overlap_s: float = 0.0  # measured stage-busy seconds hidden by overlap
+    demote_s: float = 0.0         # modeled D2H cost of demotions this open caused
+    staging_serial_modeled_s: float = 0.0
+    staging_pipelined_modeled_s: float = 0.0
 
     def modeled_total(self) -> float:
         return (self.cloud_s + self.disk_read_s + self.deserialize_s
@@ -83,6 +94,82 @@ def _default_device_put(arr: np.ndarray):
     return jnp.asarray(arr)
 
 
+# ---------------------------------------------------------------------------
+# LoadFuture — the open/prefetch state machine (DESIGN.md §3)
+# ---------------------------------------------------------------------------
+
+PENDING = "pending"
+LOADING = "loading"
+READY = "ready"
+FAILED = "failed"
+
+
+class LoadFuture:
+    """One open/prefetch in flight: ``pending -> loading -> ready | failed``.
+
+    ``stage`` names the pipeline stage currently executing (``queued``,
+    ``coalesced``, ``disk_read``, ``deserialize``, ``h2d``, ``hit``,
+    ``done``, ``failed``) for observability. ``result()`` blocks and returns
+    the :class:`ModelHandle` (or ``None`` for prefetches), re-raising any
+    load error in the caller. Coalesced waiters, prefetch hints, and
+    background loads all share this one code path.
+    """
+
+    def __init__(self, key: ModelKey, tier: str = "device",
+                 want_handle: bool = True, activation_bytes: int = 0,
+                 granularity: str = "model"):
+        self.key = key
+        self.tier = tier
+        self.want_handle = want_handle
+        self.activation_bytes = activation_bytes
+        self.granularity = granularity
+        self.state = PENDING
+        self.stage = "queued"
+        self.coalesced = False
+        self.timings = OpenTimings()
+        self._t_start = time.perf_counter()
+        self._retries = 0
+        self._ev = threading.Event()
+        self._result: Optional[ModelHandle] = None
+        self._exc: Optional[BaseException] = None
+        self._cbs = []
+        self._cb_lock = threading.Lock()
+
+    # -- caller side --------------------------------------------------------
+    def done(self) -> bool:
+        return self._ev.is_set()
+
+    def result(self, timeout: Optional[float] = None) -> Optional[ModelHandle]:
+        if not self._ev.wait(timeout):
+            raise TimeoutError(f"open of {self.key} still {self.stage}")
+        if self._exc is not None:
+            raise self._exc
+        return self._result
+
+    def exception(self, timeout: Optional[float] = None):
+        self._ev.wait(timeout)
+        return self._exc
+
+    def add_done_callback(self, fn: Callable[["LoadFuture"], None]):
+        with self._cb_lock:
+            if not self._ev.is_set():
+                self._cbs.append(fn)
+                return
+        fn(self)
+
+    # -- MRM side ------------------------------------------------------------
+    def _finish(self, result: Optional[ModelHandle] = None,
+                exc: Optional[BaseException] = None):
+        with self._cb_lock:
+            self._result, self._exc = result, exc
+            self.state = FAILED if exc is not None else READY
+            self.stage = "failed" if exc is not None else "done"
+            cbs, self._cbs = self._cbs, []
+            self._ev.set()
+        for fn in cbs:
+            fn(self)
+
+
 class MRM:
     """Model Resource Manager server (in-process core; see shm_ipc for the
     cross-process wrapper)."""
@@ -97,70 +184,79 @@ class MRM:
                  eager_reclaim: bool = False,
                  use_shm: bool = False,
                  device_put_fn: Callable = _default_device_put,
-                 simulate_h2d_time: bool = False):
+                 simulate_h2d_time: bool = False,
+                 demote_on_evict: bool = True,
+                 pipelined_staging: bool = True,
+                 staging_chunk_bytes: int = PIPELINE_CHUNK_BYTES,
+                 pipeline_depth: int = 2):
         self.disk = disk
         self.cloud = cloud
         self.hw = hw or get_hardware()
         self.device = TierCache(Tier.DEVICE, device_capacity, policy)
         self.host = TierCache(Tier.HOST, host_capacity, policy)
+        self.tiers = TierHierarchy(self.device, self.host,
+                                   demote_fn=self._demote_device_payload,
+                                   demote_on_evict=demote_on_evict)
         self.eager_reclaim = eager_reclaim
         self.use_shm = use_shm
         self.device_put_fn = device_put_fn
         self.simulate_h2d_time = simulate_h2d_time
+        self.pipelined_staging = pipelined_staging
+        self.staging_chunk_bytes = staging_chunk_bytes
+        self.pipeline_depth = pipeline_depth
         self._handles: Dict[int, ModelHandle] = {}
         self._hid = itertools.count(1)
         self._lock = threading.RLock()
-        self._loading: Dict[ModelKey, threading.Event] = {}
+        self._inflight: Dict[ModelKey, LoadFuture] = {}
         self.metrics = {
             "opens": 0, "closes": 0, "coalesced_loads": 0,
             "cloud_downloads": 0, "disk_loads": 0, "h2d_stages": 0,
             "bytes_from_disk": 0, "bytes_h2d": 0,
+            "prefetches": 0, "pipelined_loads": 0,
         }
 
     # ------------------------------------------------------------------ API
+    def open_async(self, key: ModelKey, activation_bytes: int = 0,
+                   granularity: str = "model", tier: str = "device",
+                   want_handle: bool = True,
+                   _inline: bool = False) -> LoadFuture:
+        """Resolve a model asynchronously; returns a :class:`LoadFuture`.
+
+        A tier hit completes the future before returning. Otherwise the
+        future either coalesces onto the in-flight load of the same key or
+        becomes the loader itself (in a background thread, or in the calling
+        thread when ``_inline`` — the synchronous :meth:`open` path).
+        """
+        fut = LoadFuture(ModelKey(*key), tier, want_handle,
+                         activation_bytes, granularity)
+        with self._lock:
+            if want_handle:
+                self.metrics["opens"] += 1
+            else:
+                self.metrics["prefetches"] += 1
+        self._submit(fut, inline=_inline)
+        return fut
+
     def open(self, key: ModelKey, activation_bytes: int = 0,
              granularity: str = "model", tier: str = "device") -> ModelHandle:
-        """Load (or attach to) a model; returns a refcounted handle.
+        """Blocking open: ``open_async(...).result()``.
 
         ``tier="host"`` returns host-resident numpy views without device
         staging — the cross-process (shm_ipc) path.
         """
-        t_start = time.perf_counter()
-        key = ModelKey(*key)
-        timings = OpenTimings()
-        with self._lock:
-            self.metrics["opens"] += 1
+        return self.open_async(key, activation_bytes, granularity, tier,
+                               _inline=True).result()
 
-        while True:
-            wait_ev = None
-            with self._lock:
-                hit = (self.device.get(key) if tier == "device"
-                       else self.host.get(key))
-                if hit is not None and hit.payload is None:
-                    hit = None  # capacity reserved, staging in flight
-                if hit is not None:
-                    hit.refcount += 1
-                    timings.tier_hit = tier
-                    handle = self._make_handle(key, hit, timings, granularity,
-                                               t_start, tier)
-                    return handle
-                ev = self._loading.get(key)
-                if ev is None:
-                    self._loading[key] = threading.Event()
-                    break  # we are the loader
-                wait_ev = ev
-                self.metrics["coalesced_loads"] += 1
-            wait_ev.wait()
+    def prefetch(self, key: ModelKey, tier: str = "device") -> LoadFuture:
+        """Warm ``key`` into ``tier`` in the background without taking a
+        reference; the future resolves to ``None`` when the tier is warm."""
+        return self.open_async(key, tier=tier, want_handle=False)
 
-        try:
-            handle = self._load_and_stage(key, activation_bytes, granularity,
-                                          timings, t_start, tier)
-            return handle
-        finally:
-            with self._lock:
-                ev = self._loading.pop(key, None)
-            if ev is not None:
-                ev.set()
+    def pin(self, key: ModelKey, tier: Tier = Tier.DEVICE) -> bool:
+        return self.tiers.pin(ModelKey(*key), tier)
+
+    def unpin(self, key: ModelKey, tier: Tier = Tier.DEVICE) -> bool:
+        return self.tiers.unpin(ModelKey(*key), tier)
 
     def close(self, handle: ModelHandle):
         with self._lock:
@@ -182,7 +278,80 @@ class MRM:
     def stats(self) -> dict:
         with self._lock:
             return {"device": self.device.stats(), "host": self.host.stats(),
-                    **self.metrics}
+                    **self.tiers.stats(), **self.metrics}
+
+    # ------------------------------------------------- future orchestration
+    def _submit(self, fut: LoadFuture, inline: bool = False):
+        key = fut.key
+        with self._lock:
+            cache = self.device if fut.tier == "device" else self.host
+            with cache.lock:
+                hit = cache.get(key)
+                if hit is not None and hit.payload is None:
+                    hit = None  # capacity reserved, staging in flight
+                if hit is not None and fut.want_handle:
+                    # refcount under the cache lock: an eviction pass must
+                    # never see this entry at refcount 0 once we've hit it
+                    hit.refcount += 1
+            if hit is not None:
+                fut.stage = "hit"
+                fut.timings.tier_hit = fut.tier
+                self._complete_hit(fut, hit)
+                return
+            primary = self._inflight.get(key)
+            if primary is not None:
+                fut.coalesced = True
+                fut.stage = "coalesced"
+                self.metrics["coalesced_loads"] += 1
+                primary.add_done_callback(
+                    lambda p: self._on_primary_done(fut, p))
+                return
+            self._inflight[key] = fut
+            fut.state = LOADING
+        if inline:
+            self._run_load(fut)
+        else:
+            threading.Thread(target=self._run_load, args=(fut,), daemon=True,
+                             name=f"mrm-load-{key.name}").start()
+
+    def _complete_hit(self, fut: LoadFuture, entry):
+        """Entry already refcounted by _submit when a handle is wanted."""
+        try:
+            if fut.want_handle:
+                h = self._make_handle(fut.key, entry, fut.timings,
+                                      fut.granularity, fut._t_start, fut.tier)
+            else:
+                h = None
+                fut.timings.total_s = time.perf_counter() - fut._t_start
+            fut._finish(result=h)
+        except BaseException as e:  # noqa: BLE001 — delivered via the future
+            fut._finish(exc=e)
+
+    def _on_primary_done(self, fut: LoadFuture, primary: LoadFuture):
+        """A load this future coalesced onto finished: take the hit path, or
+        re-enter the load if the entry was evicted before we attached."""
+        if primary._exc is not None:
+            fut._finish(exc=primary._exc)
+            return
+        fut._retries += 1
+        if fut._retries > 8:
+            fut._finish(exc=RuntimeError(
+                f"open of {fut.key} lost the load/evict race repeatedly"))
+            return
+        try:
+            self._submit(fut)
+        except BaseException as e:  # noqa: BLE001
+            fut._finish(exc=e)
+
+    def _run_load(self, fut: LoadFuture):
+        try:
+            result, exc = self._load_and_stage(fut), None
+        except BaseException as e:  # noqa: BLE001 — delivered via the future
+            result, exc = None, e
+        with self._lock:
+            if self._inflight.get(fut.key) is fut:
+                del self._inflight[fut.key]
+        fut._finish(result=result, exc=exc)
 
     # ------------------------------------------------------------- internals
     def _make_handle(self, key, entry, timings, granularity, t_start,
@@ -201,90 +370,370 @@ class MRM:
             self._handles[h.handle_id] = h
         return h
 
-    def _load_and_stage(self, key, activation_bytes, granularity,
-                        timings, t_start, tier: str = "device") -> ModelHandle:
-        host_entry = self.host.get(key)
-        if host_entry is None:
+    def _finish_entry(self, fut: LoadFuture, cache: TierCache, entry,
+                      unpin: bool = False,
+                      already_referenced: bool = False) -> Optional[ModelHandle]:
+        # refcount and staging-pin release must flip atomically under the
+        # cache lock: a gap would leave a refcount-0 unpinned entry that a
+        # concurrent eviction pass could reap before the handle exists
+        with cache.lock:
+            if fut.want_handle:
+                if not already_referenced:
+                    entry.refcount += 1
+            elif already_referenced:
+                entry.refcount -= 1  # prefetch: drop the provisional guard
+            if unpin:
+                entry.pinned = False
+        if not fut.want_handle:
+            fut.timings.total_s = time.perf_counter() - fut._t_start
+            return None
+        return self._make_handle(fut.key, entry, fut.timings, fut.granularity,
+                                 fut._t_start, fut.tier)
+
+    def _load_and_stage(self, fut: LoadFuture) -> Optional[ModelHandle]:
+        key, timings = fut.key, fut.timings
+        # hit-check and source refcount are one atomic step: a concurrent
+        # host-tier eviction between them would release the buffers we are
+        # about to hand out or copy from
+        host_entry = None
+        with self.host.lock:
+            e = self.host.get(key)
+            if e is not None and e.payload is not None:
+                e.refcount += 1  # provisional guard, settled below
+                host_entry = e
+
+        fresh = host_entry is None
+        if fresh:
             timings.tier_hit = "disk" if self.disk.contains(key) else "cloud"
-            host_entry = self._load_host(key, timings)
+            if fut.tier == "device" and self.pipelined_staging:
+                return self._load_cold_pipelined(fut)
+            host_entry = self._load_host(key, timings, fut)  # still pinned
         else:
             timings.tier_hit = "host"
-            host_entry.touch()
 
-        if tier == "host":
-            host_entry.refcount += 1
-            return self._make_handle(key, host_entry, timings, granularity,
-                                     t_start, tier)
+        if fut.tier == "host":
+            # warm path: the provisional ref becomes the handle's ref (or is
+            # dropped for prefetches); fresh path takes a new ref and unpins
+            return self._finish_entry(fut, self.host, host_entry, unpin=fresh,
+                                      already_referenced=not fresh)
+        try:
+            dev_entry = self._stage_device(key, host_entry,
+                                           fut.activation_bytes, timings, fut)
+        finally:
+            with self.host.lock:
+                if fresh:
+                    host_entry.pinned = False
+                else:
+                    host_entry.refcount -= 1
+        return self._finish_entry(fut, self.device, dev_entry, unpin=True)
 
-        dev_entry = self._stage_device(key, host_entry, activation_bytes, timings)
-        dev_entry.refcount += 1
-        return self._make_handle(key, dev_entry, timings, granularity, t_start)
+    def _ensure_on_disk(self, key, timings):
+        if self.disk.contains(key):
+            return
+        if self.cloud is None or not self.cloud.contains(key):
+            raise FileNotFoundError(f"model {key} not found in any tier")
+        modeled, _ = self.cloud.download(key, self.disk)
+        timings.cloud_s = modeled
+        with self._lock:
+            self.metrics["cloud_downloads"] += 1
 
-    def _load_host(self, key, timings) -> "object":
-        if not self.disk.contains(key):
-            if self.cloud is None or not self.cloud.contains(key):
-                raise FileNotFoundError(f"model {key} not found in any tier")
-            modeled, nbytes = self.cloud.download(key, self.disk)
-            timings.cloud_s = modeled
-            with self._lock:
-                self.metrics["cloud_downloads"] += 1
+    def _shm_views(self, key, specs):
+        """One segment with tensors packed back-to-back. ``specs`` is
+        ``[(name, nbytes, np_dtype, shape)]``; returns (segment, views)
+        where views maps name -> (memoryview slice, ndarray aliasing it).
+        The single packing-layout authority for loads AND demotions — the
+        wire protocol in shm_ipc assumes exactly this sequential layout."""
+        from repro.core.shm_ipc import ShmSegment
+        seg = ShmSegment.create(key, sum(nb for _, nb, _, _ in specs))
+        views = {}
+        off = 0
+        for name, nb, dtype, shape in specs:
+            view = memoryview(seg.buf)[off:off + nb]
+            count = int(np.prod(shape)) if shape else 1
+            views[name] = (view,
+                           np.frombuffer(view, dtype=dtype,
+                                         count=count).reshape(shape))
+            off += nb
+        return seg, views
 
+    def _host_sink(self, mf: ModelFile, key, nbytes: int):
+        """(arrays, segments, write(name, raw)) — shm-backed when configured."""
+        arrays: Dict[str, np.ndarray] = {}
+        segs = []
+        if self.use_shm:
+            seg, views = self._shm_views(
+                key, [(name, tm.nbytes, _np_dtype(tm.dtype), tm.shape)
+                      for name, tm in mf.tensors.items()])
+            segs = [seg]
+
+            def write(name: str, raw: bytes):
+                view, arr = views[name]
+                view[: len(raw)] = raw
+                arrays[name] = arr
+        else:
+            def write(name: str, raw: bytes):
+                tm = mf.tensors[name]
+                arrays[name] = np.frombuffer(
+                    raw, dtype=_np_dtype(tm.dtype)).reshape(tm.shape)
+        return arrays, segs, write
+
+    def _disk_stages(self, mf: ModelFile, f, write,
+                     fut: Optional[LoadFuture] = None):
+        """The shared disk_read/deserialize pipeline stages: chunked reads
+        through the open handle ``f``, deserialized via the sink's ``write``."""
+
+        def read_chunk(names):
+            if fut is not None:
+                fut.stage = "disk_read"
+            out = []
+            for n in names:
+                t = mf.tensors[n]
+                f.seek(mf.payload_base + t.offset)
+                out.append((n, f.read(t.nbytes)))
+            return out
+
+        def deser_chunk(items):
+            if fut is not None:
+                fut.stage = "deserialize"
+            for n, raw in items:
+                write(n, raw)
+            return [n for n, _ in items]
+
+        return ("disk_read", read_chunk), ("deserialize", deser_chunk)
+
+    def _record_staging_models(self, timings, nbytes: int):
+        timings.h2d_modeled_s = self.hw.h2d_time(nbytes)
+        timings.staging_serial_modeled_s = self.hw.staging_serial_time(nbytes)
+        timings.staging_pipelined_modeled_s = self.hw.staging_pipelined_time(
+            nbytes, self.staging_chunk_bytes)
+
+    def _maybe_simulate_h2d(self, timings):
+        if self.simulate_h2d_time and timings.h2d_measured_s < timings.h2d_modeled_s:
+            time.sleep(min(timings.h2d_modeled_s - timings.h2d_measured_s, 0.25))
+
+    def _load_cold_pipelined(self, fut: LoadFuture) -> Optional[ModelHandle]:
+        """HOST+DEVICE miss, device wanted: one three-stage chunk pipeline
+        (disk read | deserialize | H2D) filling BOTH tiers as chunks flow —
+        I/O overlaps deserialization overlaps device staging (DESIGN.md §4).
+        """
+        key, timings = fut.key, fut.timings
+        self._ensure_on_disk(key, timings)
         mf = self.disk.open(key)
         nbytes = mf.total_bytes
 
-        for victim in self.host.make_room(nbytes):
-            if victim.payload is not None:
-                victim.payload.release()
+        # reserve both tiers up front (device first: lock order DEVICE->HOST;
+        # placeholders are pinned so another model's eviction pass cannot
+        # reap a half-staged entry). Victims demote AFTER the device lock
+        # drops — the D2H copy must not stall concurrent opens.
+        with self.device.lock:
+            evicted = self.tiers.make_room(Tier.DEVICE,
+                                           nbytes + fut.activation_bytes)
+            d_entry = self.device.insert(key, nbytes, payload=None)
+            d_entry.pinned = True
+        h_entry = None
+        segs = []
+        try:
+            # reserve HOST room for the incoming model BEFORE demoting the
+            # device victims into it — demoting first would pay the D2H copy
+            # for entries this very reservation may immediately evict
+            with self.host.lock:
+                self.tiers.make_room(Tier.HOST, nbytes)
+                h_entry = self.host.insert(key, nbytes, payload=None)
+                h_entry.pinned = True
+            demoted = self.tiers.demote_evicted(evicted)
+            timings.demote_s = sum(self.hw.d2h_time(v.nbytes) for v in demoted)
 
-        t0 = time.perf_counter()
-        if self.use_shm:
-            from repro.core.shm_ipc import ShmSegment
-            seg = ShmSegment.create(key, nbytes)
-            arrays = {}
-            off = 0
-            for name, tm in mf.tensors.items():
-                view = memoryview(seg.buf)[off:off + tm.nbytes]
-                arrays[name] = mf.read_tensor(name, out=view)
-                off += tm.nbytes
-            hm = HostModel(arrays, nbytes, [seg])
-        else:
-            arrays = mf.read_all()
-            hm = HostModel(arrays, nbytes)
-        dt = time.perf_counter() - t0
-        # attribute: raw I/O at measured disk bw, remainder = deserialize
-        io_est = self.hw.disk_time(nbytes)
-        timings.disk_read_s = min(dt, io_est)
-        timings.deserialize_s = max(0.0, dt - timings.disk_read_s)
+            arrays, segs, write = self._host_sink(mf, key, nbytes)
+            weights: Dict[str, object] = {}
+            chunks = plan_chunks(
+                [(t.name, t.nbytes) for t in mf.tensors.values()],
+                self.staging_chunk_bytes)
+
+            def put_chunk(names):
+                fut.stage = "h2d"
+                for n in names:
+                    weights[n] = self.device_put_fn(arrays[n])
+                return names
+
+            with open(mf.path, "rb") as f:
+                _, report = run_pipeline(
+                    chunks,
+                    [*self._disk_stages(mf, f, write, fut),
+                     ("h2d", put_chunk)],
+                    depth=self.pipeline_depth)
+        except BaseException:
+            # roll back both reservations or the pinned placeholders brick
+            # the key (payload-None entries are treated as misses, but the
+            # next loader's insert would collide)
+            with self.device.lock:
+                if self.device.peek(key) is d_entry:
+                    self.device.remove(key)
+            if h_entry is not None:
+                with self.host.lock:
+                    if self.host.peek(key) is h_entry:
+                        self.host.remove(key)
+            for seg in segs:
+                seg.close_and_unlink()
+            raise
+
+        timings.disk_read_s = report.stage("disk_read").busy_s
+        timings.deserialize_s = report.stage("deserialize").busy_s
+        timings.h2d_measured_s = report.stage("h2d").busy_s
+        timings.chunks = report.n_chunks
+        timings.stage_overlap_s = report.overlap_s()
+        self._record_staging_models(timings, nbytes)
+        self._maybe_simulate_h2d(timings)
+
+        h_entry.payload = HostModel(arrays, nbytes, segs)
+        d_entry.payload = weights
+        with self.host.lock:
+            h_entry.pinned = False
         with self._lock:
             self.metrics["disk_loads"] += 1
             self.metrics["bytes_from_disk"] += nbytes
+            self.metrics["h2d_stages"] += 1
+            self.metrics["bytes_h2d"] += nbytes
+            self.metrics["pipelined_loads"] += 1
+        return self._finish_entry(fut, self.device, d_entry, unpin=True)
 
-        return self.host.insert(key, nbytes, payload=hm)
+    def _load_host(self, key, timings, fut: Optional[LoadFuture] = None):
+        """Disk/cloud -> host tier only (host-tier opens, or serial mode).
 
-    def _stage_device(self, key, host_entry, activation_bytes, timings):
+        Returns the entry STILL PINNED; the caller releases the pin once
+        the handle refcount (or device staging) no longer needs it."""
+        self._ensure_on_disk(key, timings)
+        mf = self.disk.open(key)
+        nbytes = mf.total_bytes
+
+        with self.host.lock:
+            self.tiers.make_room(Tier.HOST, nbytes)
+            entry = self.host.insert(key, nbytes, payload=None)
+            entry.pinned = True
+
+        segs = []
+        try:
+            arrays, segs, write = self._host_sink(mf, key, nbytes)
+            if self.pipelined_staging:
+                chunks = plan_chunks(
+                    [(t.name, t.nbytes) for t in mf.tensors.values()],
+                    self.staging_chunk_bytes)
+                with open(mf.path, "rb") as f:
+                    _, report = run_pipeline(
+                        chunks, list(self._disk_stages(mf, f, write, fut)),
+                        depth=self.pipeline_depth)
+                timings.disk_read_s = report.stage("disk_read").busy_s
+                timings.deserialize_s = report.stage("deserialize").busy_s
+                timings.chunks = report.n_chunks
+                timings.stage_overlap_s = report.overlap_s()
+                hm = HostModel(arrays, nbytes, segs)
+                with self._lock:
+                    self.metrics["pipelined_loads"] += 1
+            else:
+                t0 = time.perf_counter()
+                with open(mf.path, "rb") as f:
+                    for name, tm in mf.tensors.items():
+                        f.seek(mf.payload_base + tm.offset)
+                        write(name, f.read(tm.nbytes))
+                hm = HostModel(arrays, nbytes, segs)
+                dt = time.perf_counter() - t0
+                # attribute: raw I/O at measured disk bw, remainder = deserialize
+                io_est = self.hw.disk_time(nbytes)
+                timings.disk_read_s = min(dt, io_est)
+                timings.deserialize_s = max(0.0, dt - timings.disk_read_s)
+        except BaseException:
+            with self.host.lock:
+                if self.host.peek(key) is entry:
+                    self.host.remove(key)
+            for seg in segs:
+                seg.close_and_unlink()
+            raise
+
+        entry.payload = hm
+        with self._lock:
+            self.metrics["disk_loads"] += 1
+            self.metrics["bytes_from_disk"] += nbytes
+        return entry
+
+    def _stage_device(self, key, host_entry, activation_bytes, timings,
+                      fut: Optional[LoadFuture] = None):
+        """HOST hit -> device: chunked H2D (double-buffered when pipelined)."""
         nbytes = host_entry.nbytes
         need = nbytes + activation_bytes
         # reserve capacity atomically (make_room + insert under one lock):
         # concurrent stages of DIFFERENT models must not steal each other's
-        # freed room between eviction and insertion
+        # freed room between eviction and insertion; victims demote to HOST
+        # after the lock drops (D2H copy must not stall other opens)
         with self.device.lock:
-            evicted = self.device.make_room(need)
-            for _ in evicted:
-                pass  # device copies dropped; host/disk copies remain
+            evicted = self.tiers.make_room(Tier.DEVICE, need)
             entry = self.device.insert(key, nbytes, payload=None)
+            entry.pinned = True
 
-        t0 = time.perf_counter()
         hm: HostModel = host_entry.payload
-        weights = {n: self.device_put_fn(a) for n, a in hm.arrays.items()}
-        timings.h2d_measured_s = time.perf_counter() - t0
-        timings.h2d_modeled_s = self.hw.h2d_time(nbytes)
-        if self.simulate_h2d_time and timings.h2d_measured_s < timings.h2d_modeled_s:
-            time.sleep(min(timings.h2d_modeled_s - timings.h2d_measured_s, 0.25))
+        weights: Dict[str, object] = {}
+        try:
+            demoted = self.tiers.demote_evicted(evicted)
+            timings.demote_s = sum(self.hw.d2h_time(v.nbytes) for v in demoted)
+            if self.pipelined_staging:
+                chunks = plan_chunks([(n, a.nbytes) for n, a in hm.arrays.items()],
+                                     self.staging_chunk_bytes)
+
+                def prep_chunk(names):
+                    return [(n, hm.arrays[n]) for n in names]
+
+                def put_chunk(items):
+                    if fut is not None:
+                        fut.stage = "h2d"
+                    for n, a in items:
+                        weights[n] = self.device_put_fn(a)
+                    return [n for n, _ in items]
+
+                _, report = run_pipeline(chunks, [("host_prep", prep_chunk),
+                                                  ("h2d", put_chunk)],
+                                         depth=self.pipeline_depth)
+                timings.h2d_measured_s = report.stage("h2d").busy_s
+                timings.chunks = max(timings.chunks, report.n_chunks)
+                timings.stage_overlap_s += report.overlap_s()
+            else:
+                t0 = time.perf_counter()
+                for n, a in hm.arrays.items():
+                    weights[n] = self.device_put_fn(a)
+                timings.h2d_measured_s = time.perf_counter() - t0
+        except BaseException:
+            with self.device.lock:
+                if self.device.peek(key) is entry:
+                    self.device.remove(key)
+            raise
+        self._record_staging_models(timings, nbytes)
+        self._maybe_simulate_h2d(timings)
         with self._lock:
             self.metrics["h2d_stages"] += 1
             self.metrics["bytes_h2d"] += nbytes
         entry.payload = weights
+        # still pinned: _finish_entry releases the pin atomically with the
+        # handle refcount (or leaves a prefetch entry unpinned+evictable)
         return entry
+
+    def _demote_device_payload(self, victim) -> Optional[HostModel]:
+        """Eviction-as-demotion D2H: device arrays -> a HOST-tier payload.
+
+        Called by the TierHierarchy with NO cache locks held (the copy must
+        not stall other tier operations), so host-tier state may change
+        during the copy — _demote re-checks residency/room before inserting.
+        Returns None to drop the victim instead."""
+        arrays = {n: np.asarray(a) for n, a in victim.payload.items()}
+        segs = []
+        if self.use_shm:
+            seg, views = self._shm_views(
+                victim.key, [(n, a.nbytes, a.dtype, a.shape)
+                             for n, a in arrays.items()])
+            segs = [seg]
+            shm_arrays = {}
+            for n, a in arrays.items():
+                view, arr = views[n]
+                view[: a.nbytes] = a.tobytes()
+                shm_arrays[n] = arr
+            arrays = shm_arrays
+        return HostModel(arrays, victim.nbytes, segs)
 
     # ----------------------------------------------------------- inspection
     def resident(self, key: ModelKey, tier: Tier) -> bool:

@@ -14,6 +14,7 @@ Wire protocol (msgpack, 4-byte little-endian length prefix)::
       {ok, handle_id, nbytes, segments: [{shm, size}],
        tensors: [{name, dtype, shape, segment, offset}], timings: {...}}
   {op: "close", handle_id}                -> {ok}
+  {op: "prefetch", framework, name, version} -> {ok}   (async host-tier warm)
   {op: "stats"}                           -> {ok, stats}
 """
 from __future__ import annotations
@@ -62,8 +63,15 @@ class ShmSegment:
             # track=False (3.13+): the attaching process must NOT let its
             # resource tracker unlink a segment owned by the MRM daemon.
             shm = shared_memory.SharedMemory(name=name, track=False)
-        except TypeError:  # older python
+        except TypeError:
+            # older python registers attachers unconditionally (bpo-39959);
+            # unregister or this process unlinks the daemon's segment on exit
             shm = shared_memory.SharedMemory(name=name)
+            try:
+                from multiprocessing import resource_tracker
+                resource_tracker.unregister(shm._name, "shared_memory")
+            except Exception:  # noqa: BLE001 — tracking is best-effort
+                pass
         return cls(shm, owner=False)
 
     def close_and_unlink(self):
@@ -191,6 +199,12 @@ class MRMServer:
                 if hid in conn_handles:
                     conn_handles.remove(hid)
             return {"ok": True}
+        if op == "prefetch":
+            key = ModelKey(req["framework"], req["name"], req.get("version", "1"))
+            # fire-and-forget: the future completes in the daemon; the client
+            # only needs the ack — its next open coalesces onto the load
+            self.mrm.prefetch(key, tier="host")
+            return {"ok": True}
         if op == "stats":
             return {"ok": True, "stats": self.mrm.stats()}
         raise ValueError(f"unknown op {op!r}")
@@ -255,6 +269,14 @@ class RemoteTrimsClient:
                 pass
         _send(self.sock, {"op": "close", "handle_id": h.handle_id})
         _recv(self.sock)
+
+    def prefetch(self, framework: str, name: str, version: str = "1"):
+        """Ask the daemon to warm the host tier; returns once acknowledged."""
+        _send(self.sock, {"op": "prefetch", "framework": framework,
+                          "name": name, "version": version})
+        resp = _recv(self.sock)
+        if resp is None or not resp.get("ok"):
+            raise RuntimeError(f"prefetch failed: {resp}")
 
     def stats(self) -> dict:
         _send(self.sock, {"op": "stats"})

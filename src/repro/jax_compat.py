@@ -1,0 +1,43 @@
+"""Portability shims over jax API churn.
+
+The repo targets the new-style public API (``jax.shard_map``,
+``jax.set_mesh``, ``jax.sharding.AxisType``); this module maps each onto
+the installed jax when running on an older release so production code and
+tests never branch on versions themselves.
+"""
+from __future__ import annotations
+
+import jax
+
+try:
+    from jax.sharding import AxisType  # noqa: F401  (jax >= 0.5)
+except ImportError:
+    AxisType = None
+
+try:  # pltpu.CompilerParams was TPUCompilerParams before the rename
+    from jax.experimental.pallas import tpu as _pltpu
+    CompilerParams = getattr(_pltpu, "CompilerParams",
+                             getattr(_pltpu, "TPUCompilerParams", None))
+except ImportError:
+    CompilerParams = None
+
+
+def shard_map(f, mesh, in_specs, out_specs, axis_names=None, check=False):
+    """New-style ``jax.shard_map``; falls back to the experimental API.
+
+    ``axis_names`` is the set of mesh axes the body is manual over (new
+    API); the old API expresses the same thing inversely via ``auto`` =
+    the complement. ``check`` maps to check_vma/check_rep respectively.
+    """
+    if hasattr(jax, "shard_map"):
+        kwargs = {"check_vma": check}
+        if axis_names is not None:
+            kwargs["axis_names"] = set(axis_names)
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kwargs)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    manual = frozenset(axis_names) if axis_names is not None \
+        else frozenset(mesh.axis_names)
+    auto = frozenset(mesh.axis_names) - manual
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check, auto=auto)

@@ -10,15 +10,31 @@ from __future__ import annotations
 from typing import Tuple
 
 import jax
-from jax.sharding import AxisType
+
+from repro.jax_compat import AxisType
+
+
+def make_mesh(shape, axes):
+    """Version-portable ``jax.make_mesh`` (axis_types only where supported)."""
+    if AxisType is not None:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
+def set_mesh(mesh):
+    """Context manager making ``mesh`` ambient: ``jax.set_mesh`` on new jax,
+    the Mesh's own resource-env context on older versions."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh  # Mesh is a context manager itself on older jax
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = 256 chips per pod (v5e); multi-pod adds a leading pod=2 axis."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_local_mesh(data: int = 1, model: int = 1):
@@ -26,8 +42,7 @@ def make_local_mesh(data: int = 1, model: int = 1):
     n = len(jax.devices())
     data = min(data, n)
     model = max(1, min(model, n // data))
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(AxisType.Auto, AxisType.Auto))
+    return make_mesh((data, model), ("data", "model"))
 
 
 def batch_axes(mesh) -> Tuple[str, ...]:

@@ -78,8 +78,12 @@ class InferenceEngine:
         self.mrm = mrm
         self.use_trims = use_trims and mrm is not None
         self.trims = TrimsClient(mrm, "engine") if self.use_trims else None
-        self._exe_cache: Dict[Tuple[str, str, int, int], Any] = {}
-        self._cfg_cache: Dict[str, ModelConfig] = {}
+        # exe cache is keyed by architecture signature (not model identity) so
+        # same-topology models share programs; the (B, S, max_len) tail keys
+        # the actual traced shapes. cfg cache MUST key by (name, version) —
+        # version "2" of a model may ship a different architecture.
+        self._exe_cache: Dict[Tuple[str, str, int, int, int], Any] = {}
+        self._cfg_cache: Dict[Tuple[str, str], ModelConfig] = {}
         self._lock = threading.RLock()
         self.stats: List[RequestStats] = []
         self.exe_cache_hits = 0
@@ -100,8 +104,8 @@ class InferenceEngine:
         """Resolve weights (TrIMS or cold) -> params tree. Returns
         (model, load_seconds)."""
         key = ModelKey(FRAMEWORK, name, version)
-        cfg = self._cfg_cache.get(name) or self._config_for(key)
-        self._cfg_cache[name] = cfg
+        cfg = self._cfg_cache.get((name, version)) or self._config_for(key)
+        self._cfg_cache[(name, version)] = cfg
         t0 = time.perf_counter()
         if self.use_trims:
             h = self.trims.open(FRAMEWORK, name, version)
@@ -120,12 +124,35 @@ class InferenceEngine:
     def release(self, sm: ServableModel):
         free_model(sm.loaded, self.trims)
 
+    def prefetch(self, name: str, version: str = "1"):
+        """Warm the next model's weights toward the device tier in the
+        background — issued by workers so the next request's load overlaps
+        the current request's compute. No-op without TrIMS.
+
+        Device-tier prefetch is gated on free HBM: staging into a full
+        device tier would evict (or capacity-block) the model the *current*
+        request is about to open. Without headroom we still warm the host
+        tier — that is where the expensive disk+deserialize work lives."""
+        if not self.use_trims:
+            return None
+        key = ModelKey(FRAMEWORK, name, version)
+        if not self.disk.contains(key):
+            return None
+        tier = "device"
+        try:
+            if self.mrm.device.free_bytes() < self.disk.open(key).total_bytes:
+                tier = "host"
+        except Exception:  # noqa: BLE001 — a hint must never fail the worker
+            tier = "host"
+        return self.mrm.prefetch(key, tier=tier)
+
     # ------------------------------------------------------------- compile
     def _executable(self, sm: ServableModel, kind: str, B: int, S: int,
                     max_len: int) -> Tuple[Any, float]:
         """Executable cache keyed by topology signature, NOT model name —
-        same-architecture models share one compiled program."""
-        sig = (arch_signature(sm.cfg), kind, B, S)
+        same-architecture models share one compiled program. ``max_len`` is
+        part of the key: it is baked into the traced program."""
+        sig = (arch_signature(sm.cfg), kind, B, S, max_len)
         with self._lock:
             exe = self._exe_cache.get(sig)
         if exe is not None:
@@ -214,9 +241,11 @@ class ServingWorkers:
     """N concurrent workers draining a shared queue — the paper's
     'concurrency level'."""
 
-    def __init__(self, engine: InferenceEngine, n_workers: int = 4):
+    def __init__(self, engine: InferenceEngine, n_workers: int = 4,
+                 lookahead_prefetch: bool = True):
         self.engine = engine
         self.n_workers = n_workers
+        self.lookahead_prefetch = lookahead_prefetch
         import queue as _q
         self.q: "_q.Queue[Optional[Request]]" = _q.Queue()
         self.threads = [threading.Thread(target=self._run, daemon=True)
@@ -229,11 +258,25 @@ class ServingWorkers:
         self.q.put(req)
         return req
 
+    def _peek_next_model(self) -> Optional[str]:
+        """Model of the next queued request (no dequeue) — prefetch target."""
+        with self.q.mutex:
+            for item in self.q.queue:
+                if item is not None:
+                    return item.model
+        return None
+
     def _run(self):
         while True:
             req = self.q.get()
             if req is None:
                 return
+            if self.lookahead_prefetch:
+                nxt = self._peek_next_model()
+                if nxt is not None and nxt != req.model:
+                    # overlap the NEXT request's model staging with THIS
+                    # request's load+compute (async MRM load, zero refs)
+                    self.engine.prefetch(nxt)
             try:
                 req.result, req.stats = self.engine.generate(
                     req.model, req.tokens, req.max_new)

@@ -7,6 +7,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # skipped by scripts/ci.sh --fast
+
 from repro.configs import ARCHS, get_config, list_archs
 from repro.data.pipeline import make_batch
 from repro.models import (decode_step, forward, init_params, loss_fn, prefill)

@@ -12,12 +12,13 @@ import textwrap
 
 import pytest
 
+pytestmark = pytest.mark.slow  # skipped by scripts/ci.sh --fast
+
 PROBE = textwrap.dedent("""
     import os, json, sys
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     sys.path.insert(0, "src")
     import jax
-    from jax.sharding import AxisType
     import repro.launch.dryrun as dr
     import repro.launch.mesh as mesh_mod
 
@@ -25,8 +26,7 @@ PROBE = textwrap.dedent("""
     def small_mesh(*, multi_pod=False):
         shape = (2, 2, 2) if multi_pod else (2, 4)
         axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-        return jax.make_mesh(shape, axes,
-                             axis_types=(AxisType.Auto,) * len(axes))
+        return mesh_mod.make_mesh(shape, axes)
     dr.make_production_mesh = small_mesh
 
     from repro.configs import get_config, SHAPES_BY_NAME

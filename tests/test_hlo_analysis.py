@@ -78,10 +78,10 @@ PROBE = textwrap.dedent("""
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     sys.path.insert(0, "src")
     import jax, jax.numpy as jnp
-    from jax.sharding import PartitionSpec as P, NamedSharding, AxisType
+    from jax.sharding import PartitionSpec as P, NamedSharding
     from repro.launch.hlo_analysis import analyze_hlo
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((2, 4), ("data", "model"))
     L, B, D = 6, 256, 128
     def g(a, ws):
         def body(x, w):

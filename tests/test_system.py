@@ -3,6 +3,8 @@ through TrIMS, with isolation and sharing verified along the way."""
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # skipped by scripts/ci.sh --fast
+
 import jax
 import jax.numpy as jnp
 
