@@ -72,6 +72,17 @@ def main() -> None:
     out.append(("ablation_eviction", 0.0,
                 f"hit_rate_spread={spread:.3f};policies=lru,lcu,fifo,largest"))
 
+    print("== cluster: cloud vs warm-peer fetch + routing affinity ==", flush=True)
+    from benchmarks import bench_cluster
+    rows_c = bench_cluster.run(verbose=True)
+    by_cfg = {r["config"]: r for r in rows_c}
+    n_fetches = (by_cfg["warm-peer"]["cloud_fetches"]
+                 + by_cfg["warm-peer"]["peer_fetches"])
+    out.append(("cluster_ablation",
+                1e6 * by_cfg["warm-peer"]["modeled_fetch_s"] / max(1, n_fetches),
+                f"peer_speedup={by_cfg['cloud-only']['modeled_fetch_s'] / by_cfg['warm-peer']['modeled_fetch_s']:.1f}x;"
+                f"affinity_speedup={by_cfg['round_robin']['modeled_total_s'] / by_cfg['affinity']['modeled_total_s']:.1f}x"))
+
     if not args.skip_serving:
         print("== end-to-end serving (live models) ==", flush=True)
         from benchmarks import bench_serving

@@ -1,0 +1,96 @@
+#!/usr/bin/env python
+"""Docs gate for scripts/ci.sh: required files exist, internal links resolve.
+
+Checks, in order:
+  1. the documentation surface exists (README.md, DESIGN.md, docs/API.md,
+     ROADMAP.md) and carries its required anchors/sections;
+  2. every relative markdown link in root-level and docs/ markdown files
+     points at a file that exists, and same-file ``#anchor`` links match a
+     heading (GitHub slug rules, simplified).
+
+Exits non-zero with one line per violation.
+"""
+from __future__ import annotations
+
+import glob
+import os
+import re
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+REQUIRED_FILES = ["README.md", "DESIGN.md", "ROADMAP.md",
+                  os.path.join("docs", "API.md")]
+# (file, substring) pairs that must be present
+REQUIRED_CONTENT = [
+    ("README.md", "DESIGN.md"),
+    ("README.md", "ROADMAP.md"),
+    ("README.md", "docs/API.md"),
+    ("DESIGN.md", "Cloud tier & cluster sharing"),
+    (os.path.join("docs", "API.md"), "ClusterDirectory"),
+    (os.path.join("docs", "API.md"), "ObjectStore"),
+]
+
+LINK_RE = re.compile(r"(?<!\!)\[[^\]]+\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+
+
+def slugify(heading: str) -> str:
+    """GitHub-style anchor slug (simplified): lowercase, strip punctuation,
+    spaces to hyphens."""
+    s = heading.strip().lower()
+    s = re.sub(r"[^\w\s§&-]", "", s, flags=re.UNICODE)
+    return re.sub(r"\s+", "-", s)
+
+
+def anchors_of(path: str) -> set:
+    with open(path, encoding="utf-8") as f:
+        return {slugify(h) for h in HEADING_RE.findall(f.read())}
+
+
+def check_links(md_path: str, errors: list):
+    with open(md_path, encoding="utf-8") as f:
+        text = f.read()
+    rel = os.path.relpath(md_path, ROOT)
+    for target in LINK_RE.findall(text):
+        if re.match(r"^[a-z][a-z0-9+.-]*:", target):  # http:, mailto:, ...
+            continue
+        path_part, _, anchor = target.partition("#")
+        if path_part:
+            resolved = os.path.normpath(
+                os.path.join(os.path.dirname(md_path), path_part))
+            if not os.path.exists(resolved):
+                errors.append(f"{rel}: broken link -> {target}")
+                continue
+        else:
+            resolved = md_path  # pure #anchor: same file
+        if anchor and resolved.endswith(".md"):
+            if slugify(anchor) not in anchors_of(resolved):
+                errors.append(f"{rel}: dangling anchor -> {target}")
+
+
+def main() -> int:
+    errors = []
+    for rel in REQUIRED_FILES:
+        if not os.path.exists(os.path.join(ROOT, rel)):
+            errors.append(f"missing required doc: {rel}")
+    for rel, needle in REQUIRED_CONTENT:
+        path = os.path.join(ROOT, rel)
+        if not os.path.exists(path):
+            continue  # already reported above
+        with open(path, encoding="utf-8") as f:
+            if needle not in f.read():
+                errors.append(f"{rel}: required content missing: {needle!r}")
+    for md in sorted(glob.glob(os.path.join(ROOT, "*.md"))
+                     + glob.glob(os.path.join(ROOT, "docs", "*.md"))):
+        check_links(md, errors)
+    for e in errors:
+        print(f"check_docs: {e}", file=sys.stderr)
+    if not errors:
+        print(f"check_docs: OK ({len(REQUIRED_FILES)} required docs, "
+              f"links resolve)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -10,6 +10,10 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+# docs gate: required docs exist and internal links resolve (fast, runs in
+# both full and --fast modes)
+python scripts/check_docs.py
+
 ARGS=(-x -q)
 if [[ "${1:-}" == "--fast" ]]; then
     shift

@@ -15,7 +15,7 @@ CONFIG = ModelConfig(
     vocab_size=152064,
     qkv_bias=True,
     rope_theta=1e6,
-    opt_moment_dtype="bfloat16",  # fits v5e HBM budget; see DESIGN.md §5
+    opt_moment_dtype="bfloat16",  # fits the v5e HBM budget
     grad_accum=4,
     source="[hf:Qwen/Qwen1.5-0.5B; hf]",
 )

@@ -1,7 +1,8 @@
 """TrIMS core — the paper's primary contribution.
 
 Model Resource Manager (multi-tier cache), transparent client, sharing
-cost model, cross-process shm IPC, FaaS isolation layer, proxy zoo.
+cost model, cross-process shm IPC, FaaS isolation layer, cluster-wide
+sharing (directory + peer fetch), CLOUD object store, proxy zoo.
 """
 from repro.core.cache import (  # noqa: F401
     CacheEntry, CapacityError, EvictionPolicy, FIFO, LCU, LRU, Largest,
@@ -10,8 +11,10 @@ from repro.core.cache import (  # noqa: F401
 from repro.core.client import (  # noqa: F401
     LoadedModel, TrimsClient, cold_load, free_model, load_model,
 )
+from repro.core.cluster import Cluster, ClusterDirectory, ClusterNode  # noqa: F401
 from repro.core.costmodel import HardwareModel, get_hardware  # noqa: F401
 from repro.core.faas import Container, FaaSPlatform, IsolationError, Router  # noqa: F401
+from repro.core.objectstore import ObjectStore  # noqa: F401
 from repro.core.mrm import (  # noqa: F401
     LoadFuture, MRM, ModelHandle, ModelKey, OpenTimings,
 )

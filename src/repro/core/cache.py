@@ -19,7 +19,14 @@ class Tier(Enum):
     DEVICE = 0   # TPU HBM (GPU memory in the paper)
     HOST = 1     # host DRAM (CPU memory)
     DISK = 2     # local storage
-    REMOTE = 3   # cloud storage
+    CLOUD = 3    # object store (paper §3 "cloud storage")
+    REMOTE = 3   # legacy alias for CLOUD
+
+    @property
+    def warmth(self) -> int:
+        """Rank for affinity scoring: warmer (closer to compute) is higher —
+        DEVICE=3, HOST=2, DISK=1, CLOUD=0."""
+        return 3 - self.value
 
 
 @dataclass
@@ -94,11 +101,34 @@ class TierCache:
         self.entries: Dict[Hashable, CacheEntry] = {}
         self.used = 0
         self.lock = threading.RLock()
+        # residency listeners: fn(event, entry) with event "insert"/"remove",
+        # called under the cache lock — listeners must only touch leaf locks
+        # (the cluster directory, a writeback queue), never another tier cache
+        self.listeners: List = []
         # metrics
         self.hits = 0
         self.misses = 0
         self.evictions = 0
         self.bytes_evicted = 0
+
+    def add_listener(self, fn) -> None:
+        """Subscribe to insert/remove events (cluster directory, write-back).
+
+        ``fn(event, entry)`` fires under the cache lock; it must be fast and
+        must not acquire any tier-cache lock (see DESIGN.md §6 lock order).
+        """
+        with self.lock:
+            self.listeners.append(fn)
+
+    def remove_listener(self, fn) -> None:
+        """Unsubscribe (no-op if ``fn`` was never added)."""
+        with self.lock:
+            if fn in self.listeners:
+                self.listeners.remove(fn)
+
+    def _notify(self, event: str, entry: CacheEntry) -> None:
+        for fn in self.listeners:
+            fn(event, entry)
 
     # -- queries ------------------------------------------------------------
     def get(self, key) -> Optional[CacheEntry]:
@@ -159,11 +189,13 @@ class TierCache:
             e = CacheEntry(key=key, nbytes=nbytes, payload=payload, refcount=refcount)
             self.entries[key] = e
             self.used += nbytes
+            self._notify("insert", e)
             return e
 
     def _remove_locked(self, key) -> CacheEntry:
         e = self.entries.pop(key)
         self.used -= e.nbytes
+        self._notify("remove", e)
         return e
 
     def remove(self, key) -> CacheEntry:
@@ -183,6 +215,9 @@ class TierCache:
 
 class TierHierarchy:
     """The DEVICE -> HOST -> DISK tier chain as one object (DESIGN.md §2).
+
+    The CLOUD tier below DISK is not a cache — the MRM falls through to it
+    (``ObjectStore``/peer fetch, DESIGN.md §6) when DISK misses.
 
     Eviction is *demotion*: a victim pushed out of DEVICE is re-homed in the
     HOST tier (via ``demote_fn``, which performs the D2H payload conversion)

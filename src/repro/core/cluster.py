@@ -1,0 +1,265 @@
+"""Cluster-wide model sharing (paper §4.2 multi-node, DESIGN.md §6).
+
+Single-node TrIMS makes every process on a machine share one copy of a
+model; this module makes every *machine* in a cluster share the work of
+fetching one. A :class:`ClusterDirectory` tracks which node holds which
+model at which tier, and each :class:`ClusterNode` plugs a source-selection
+hook into its MRM's DISK-miss path: pull the model over the modeled peer
+link from a node that already holds it when the cost model says that beats
+the CLOUD tier, otherwise fall through to the object store.
+
+Directory consistency (DESIGN.md §6): entries are *hints*, maintained by
+tier-cache listeners (publish on insert, withdraw on remove) plus a DISK
+publish whenever a model lands on a node's local store. A stale hint is
+safe — peer fetch re-verifies the peer's disk copy before transferring and
+returns the miss to the MRM's CLOUD fall-through.
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import threading
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.core.cache import Tier
+from repro.core.mrm import MRM, ModelKey
+
+
+class ClusterDirectory:
+    """Cluster-wide map: model key -> {node name -> tiers held}. Thread-safe.
+
+    The directory lock is a *leaf* lock: publish/withdraw are called from
+    tier-cache listeners (under a cache lock) and never call back into any
+    cache, so the only lock order is cache -> directory.
+    """
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._where: Dict[ModelKey, Dict[str, Set[Tier]]] = {}
+        self._nodes: Dict[str, "ClusterNode"] = {}
+
+    # -- membership ---------------------------------------------------------
+    def register(self, node: "ClusterNode"):
+        with self._lock:
+            if node.name in self._nodes:
+                raise KeyError(f"node {node.name!r} already registered")
+            self._nodes[node.name] = node
+
+    def node(self, name: str) -> Optional["ClusterNode"]:
+        with self._lock:
+            return self._nodes.get(name)
+
+    def nodes(self) -> List["ClusterNode"]:
+        with self._lock:
+            return list(self._nodes.values())
+
+    def drop_node(self, name: str):
+        """Remove a node and every placement hint pointing at it; the
+        node's cache listeners and remote-fetch hook are detached so it
+        cannot republish itself into the directory."""
+        with self._lock:
+            node = self._nodes.pop(name, None)
+            for key in list(self._where):
+                self._where[key].pop(name, None)
+                if not self._where[key]:
+                    del self._where[key]
+        if node is not None:
+            node.detach()
+
+    # -- placement hints ------------------------------------------------------
+    def publish(self, node_name: str, key: ModelKey, tier: Tier):
+        key = ModelKey(*key)
+        with self._lock:
+            self._where.setdefault(key, {}).setdefault(node_name, set()).add(tier)
+
+    def withdraw(self, node_name: str, key: ModelKey, tier: Tier):
+        key = ModelKey(*key)
+        with self._lock:
+            holders = self._where.get(key)
+            if not holders:
+                self._where.pop(key, None)  # prune an emptied-out entry
+                return
+            tiers = holders.get(node_name)
+            if tiers is None:
+                return
+            tiers.discard(tier)
+            if not tiers:
+                del holders[node_name]
+            if not holders:
+                del self._where[key]
+
+    # -- queries --------------------------------------------------------------
+    def holders(self, key: ModelKey,
+                exclude: Optional[str] = None) -> List[Tuple[str, Tier]]:
+        """``(node_name, warmest_tier)`` per holding node, warmest first."""
+        key = ModelKey(*key)
+        with self._lock:
+            out = [(name, min(tiers, key=lambda t: t.value))
+                   for name, tiers in self._where.get(key, {}).items()
+                   if tiers and name != exclude]
+        return sorted(out, key=lambda nt: nt[1].value)
+
+    def warmest(self, key: ModelKey,
+                exclude: Optional[str] = None) -> Optional[Tuple[str, Tier]]:
+        held = self.holders(key, exclude=exclude)
+        return held[0] if held else None
+
+    def tier_on(self, key: ModelKey, node_name: str) -> Optional[Tier]:
+        """Warmest tier ``node_name`` holds ``key`` at, or None."""
+        key = ModelKey(*key)
+        with self._lock:
+            tiers = self._where.get(key, {}).get(node_name)
+            return min(tiers, key=lambda t: t.value) if tiers else None
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {"models": len(self._where), "nodes": len(self._nodes),
+                    "placements": sum(len(h) for h in self._where.values())}
+
+
+class ClusterNode:
+    """One machine in the cluster: an MRM plus directory/peer-fetch wiring.
+
+    Construction registers the node with the directory, publishes its disk
+    contents, subscribes listeners on the MRM's DEVICE/HOST tier caches, and
+    installs :meth:`fetch_for` as the MRM's ``remote_fetch`` hook so every
+    DISK miss source-selects between the peer link and the CLOUD tier.
+    """
+
+    def __init__(self, name: str, mrm: MRM, directory: ClusterDirectory,
+                 peer_fetch: bool = True):
+        self.name = name
+        self.mrm = mrm
+        self.directory = directory
+        self.hw = mrm.hw
+        self.peer_fetch_enabled = peer_fetch
+        # cloud downloads are counted by the MRM (metrics["cloud_downloads"])
+        # — the node only tracks the peer traffic it originates/serves
+        self.metrics = {"peer_fetches": 0, "peer_serves": 0,
+                        "bytes_from_peers": 0}
+        self._metrics_lock = threading.Lock()  # leaf; never held over another
+        directory.register(self)
+        for key in mrm.disk.keys():
+            directory.publish(name, ModelKey(*key), Tier.DISK)
+        self._listeners = [(mrm.device, self._listener(Tier.DEVICE)),
+                           (mrm.host, self._listener(Tier.HOST))]
+        for cache, fn in self._listeners:
+            cache.add_listener(fn)
+        mrm.remote_fetch = self.fetch_for
+
+    def detach(self) -> None:
+        """Disconnect from the cluster: stop publishing residency changes
+        and stop resolving DISK misses via peers. Idempotent; called by
+        ``ClusterDirectory.drop_node``."""
+        for cache, fn in self._listeners:
+            cache.remove_listener(fn)
+        self._listeners = []
+        if self.mrm.remote_fetch == self.fetch_for:
+            self.mrm.remote_fetch = None
+
+    def _listener(self, tier: Tier):
+        """Tier-cache listener keeping the directory in sync (fires under
+        the cache lock; the directory lock is a leaf, so this is safe)."""
+        def on_event(event: str, entry):
+            if event == "insert":
+                self.directory.publish(self.name, entry.key, tier)
+                # a model entering DEVICE/HOST is necessarily on this
+                # node's disk (the cold chain lands it there first)
+                self.directory.publish(self.name, entry.key, Tier.DISK)
+            else:
+                self.directory.withdraw(self.name, entry.key, tier)
+        return on_event
+
+    # -- queries --------------------------------------------------------------
+    def resident_tier(self, key: ModelKey) -> Optional[Tier]:
+        """Warmest local tier holding ``key`` (DEVICE/HOST/DISK), or None."""
+        key = ModelKey(*key)
+        t = self.mrm.tiers.resident_tier(key)
+        if t is not None:
+            return t
+        return Tier.DISK if self.mrm.disk.contains(key) else None
+
+    # -- peer-to-peer fetch ---------------------------------------------------
+    def _cheapest_peer(self, key: ModelKey):
+        """(peer_node, peer_tier, modeled_s, nbytes) or None."""
+        best = None
+        for node_name, tier in self.directory.holders(key, exclude=self.name):
+            peer = self.directory.node(node_name)
+            if peer is None or not peer.mrm.disk.contains(key):
+                continue  # stale hint — skip, CLOUD fall-through covers us
+            nbytes = os.path.getsize(peer.mrm.disk.path_for(key))
+            t = self.hw.peer_fetch_time(nbytes, peer_disk=tier == Tier.DISK)
+            if best is None or t < best[2]:
+                best = (peer, tier, t, nbytes)
+        return best
+
+    def _cloud_link_time(self, key: ModelKey, nbytes: int):
+        """Modeled seconds to pull ``key`` from the CLOUD tier, using the
+        holding store's OWN link constants (they are what the download will
+        actually be charged at — the hw constants are only the default the
+        stores were built from). None when no cloud source holds the key."""
+        for store in (self.mrm.cloud, self.mrm.objectstore):
+            if store is not None and store.contains(key):
+                return store.rtt + nbytes / store.bw
+        return None
+
+    def fetch_for(self, key: ModelKey, timings) -> bool:
+        """MRM ``remote_fetch`` hook: resolve a DISK miss from the cheapest
+        source. Returns True when the model was pulled from a peer; False
+        hands the miss back to the MRM's CLOUD fall-through (which is also
+        the answer when the cost model says the cloud link is cheaper)."""
+        key = ModelKey(*key)
+        best = self._cheapest_peer(key) if self.peer_fetch_enabled else None
+        if best is None:
+            return False  # the MRM's fall-through pays the CLOUD leg
+        peer, peer_tier, peer_s, nbytes = best
+        cloud_s = self._cloud_link_time(key, nbytes)
+        source, _ = self.hw.pick_fetch_source(
+            nbytes, have_peer=True, have_cloud=cloud_s is not None,
+            peer_s=peer_s, cloud_s=cloud_s)
+        if source != "peer":
+            return False
+        src = peer.mrm.disk.path_for(key)
+        dst = self.mrm.disk.path_for(key)
+        os.makedirs(os.path.dirname(dst), exist_ok=True)
+        shutil.copyfile(src, dst + ".tmp")
+        os.replace(dst + ".tmp", dst)
+        timings.peer_s = peer_s
+        with self._metrics_lock:
+            self.metrics["peer_fetches"] += 1
+            self.metrics["bytes_from_peers"] += nbytes
+        with peer._metrics_lock:
+            peer.metrics["peer_serves"] += 1
+        with self.mrm._lock:
+            self.mrm.metrics["peer_fetches"] += 1
+            self.mrm.metrics["modeled_fetch_s"] += peer_s
+        self.directory.publish(self.name, key, Tier.DISK)
+        return True
+
+    def stats(self) -> dict:
+        with self._metrics_lock:
+            return {"name": self.name, **self.metrics}
+
+
+class Cluster:
+    """Convenience wiring: N nodes sharing one directory and CLOUD tier."""
+
+    def __init__(self, objectstore=None, directory: Optional[ClusterDirectory] = None):
+        self.directory = directory or ClusterDirectory()
+        self.objectstore = objectstore
+        self.nodes: Dict[str, ClusterNode] = {}
+
+    def add_node(self, name: str, mrm: MRM,
+                 peer_fetch: bool = True) -> ClusterNode:
+        if mrm.objectstore is None and self.objectstore is not None:
+            mrm.attach_objectstore(self.objectstore)
+        node = ClusterNode(name, mrm, self.directory, peer_fetch=peer_fetch)
+        self.nodes[name] = node
+        return node
+
+    def node(self, name: str) -> ClusterNode:
+        return self.nodes[name]
+
+    def stats(self) -> dict:
+        return {"directory": self.directory.stats(),
+                "nodes": [n.stats() for n in self.nodes.values()]}

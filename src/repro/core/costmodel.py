@@ -28,6 +28,9 @@ PIPELINE_CHUNK_BYTES = 4 << 20  # default staging chunk (DESIGN.md §4)
 
 @dataclass
 class HardwareModel:
+    """Per-system transfer/compute constants (paper Table 2 methodology):
+    measured disk/cached-read bandwidth paired with TPU v5e datasheet
+    rates, plus the modeled cloud and intra-cluster links (DESIGN.md §6)."""
     peak_flops: float = PEAK_FLOPS_BF16
     hbm_bw: float = HBM_BW
     ici_bw: float = ICI_BW_PER_LINK
@@ -36,8 +39,10 @@ class HardwareModel:
     disk_bw: float = 500e6          # overwritten by measure()
     disk_lat: float = 1e-4
     cached_read_bw: float = 8e9     # page-cache hits
-    cloud_bw: float = 1e9           # "remote storage" tier
+    cloud_bw: float = 1e9           # CLOUD tier (object store / remote repo)
     cloud_rtt: float = 20e-3
+    peer_bw: float = 10e9           # intra-cluster link (100GbE-class)
+    peer_rtt: float = 0.5e-3
 
     def h2d_time(self, nbytes: int) -> float:
         return nbytes / self.h2d_bw
@@ -50,6 +55,46 @@ class HardwareModel:
 
     def cloud_time(self, nbytes: int) -> float:
         return self.cloud_rtt + nbytes / self.cloud_bw
+
+    # -- cluster fetch-source selection (DESIGN.md §6) ----------------------
+    def cloud_fetch_time(self, nbytes: int) -> float:
+        """Pulling a model out of the CLOUD tier into local disk."""
+        return self.cloud_time(nbytes)
+
+    def peer_fetch_time(self, nbytes: int, peer_disk: bool = True) -> float:
+        """Pulling a model from a peer node over the cluster link.
+
+        The transfer streams, so the bottleneck is min(link, source) —
+        when the peer copy is only on its disk the peer-side read rate
+        caps the stream; a HOST/DEVICE-resident copy streams from DRAM
+        at full link rate.
+        """
+        bw = min(self.peer_bw, self.disk_bw) if peer_disk else self.peer_bw
+        return self.peer_rtt + nbytes / bw
+
+    def pick_fetch_source(self, nbytes: int, have_peer: bool,
+                          have_cloud: bool, peer_disk: bool = True,
+                          peer_s: float = None,
+                          cloud_s: float = None) -> tuple:
+        """Cheapest available source for a DISK-miss fetch.
+
+        Returns ``(source, modeled_seconds)`` with source one of
+        ``"peer"`` / ``"cloud"``; raises KeyError when neither is
+        available (the caller turns that into FileNotFoundError).
+        ``peer_s``/``cloud_s`` override the default link models — the
+        cluster passes the holding store's own constants (DESIGN.md §6).
+        """
+        options = {}
+        if have_peer:
+            options["peer"] = (peer_s if peer_s is not None
+                               else self.peer_fetch_time(nbytes, peer_disk))
+        if have_cloud:
+            options["cloud"] = (cloud_s if cloud_s is not None
+                                else self.cloud_fetch_time(nbytes))
+        if not options:
+            raise KeyError("no fetch source available")
+        src = min(options, key=options.get)
+        return src, options[src]
 
     def compute_time(self, flops: float) -> float:
         return flops / self.peak_flops

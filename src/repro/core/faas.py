@@ -9,7 +9,10 @@ another tenant's handle (the paper's Docker-volume-plugin boundary, moved to
 the runtime layer per DESIGN.md §2).
 
 Multi-node (paper §4.2): :class:`Router` load-balances invocations across
-several platforms and prefers nodes already advertising the needed models.
+several platforms, dispatching to the node holding the request's models at
+the *warmest* tier (DESIGN.md §6) and issuing prefetch hints to the chosen
+node; platforms backed by a ``core.cluster.ClusterNode`` additionally
+resolve disk-cold models from peers or the CLOUD object store.
 """
 from __future__ import annotations
 
@@ -19,6 +22,7 @@ import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
+from repro.core.cache import Tier
 from repro.core.client import LoadedModel, TrimsClient, cold_load, free_model
 from repro.core.mrm import MRM, ModelKey
 
@@ -73,7 +77,8 @@ class Container:
                                 via_trims=True, handle=h)
             else:
                 self.acct.cold_starts += 1
-                m = cold_load(self.platform.disk, key)
+                m = cold_load(self.platform.disk, key,
+                              objectstore=self.platform.objectstore)
             self.acct.model_load_s += time.perf_counter() - t0
             self.acct.bytes_loaded += m.nbytes
             self._models[key] = m
@@ -92,7 +97,7 @@ class Container:
             version = m[2] if len(m) > 2 else "1"
             if self.allowed is not None and (fw, name) not in self.allowed:
                 continue
-            if not self.platform.disk.contains(ModelKey(fw, name, version)):
+            if not self.platform.can_resolve(ModelKey(fw, name, version)):
                 continue
             futs.append(self._trims.prefetch(fw, name, version))
         return futs
@@ -127,10 +132,19 @@ class FunctionSpec:
 class FaaSPlatform:
     """One node: containers + (optionally) a TrIMS MRM."""
 
-    def __init__(self, mrm: Optional[MRM], disk=None, name: str = "node0"):
+    def __init__(self, mrm: Optional[MRM], disk=None, name: str = "node0",
+                 cluster_node=None, objectstore=None):
         self.mrm = mrm
         self.disk = disk if disk is not None else (mrm.disk if mrm else None)
+        # CLOUD tier for the no-MRM baseline path (four-tier parity: an
+        # un-TrIMSed cold load downloads from here on every DISK miss);
+        # TrIMS platforms inherit the MRM's store
+        self.objectstore = objectstore if objectstore is not None \
+            else (mrm.objectstore if mrm else None)
         self.name = name
+        # optional core.cluster.ClusterNode backing this platform — set when
+        # the node participates in cluster-wide sharing (DESIGN.md §6)
+        self.cluster_node = cluster_node
         self.functions: Dict[str, FunctionSpec] = {}
         self.containers: Dict[str, Container] = {}
         self._lock = threading.RLock()
@@ -150,12 +164,26 @@ class FaaSPlatform:
             c.prefetch_models(allowed_models)
         return c
 
+    def can_resolve(self, key: ModelKey) -> bool:
+        """Whether this node can materialize ``key`` from ANY source: local
+        disk, the CLOUD tier, or (when clustered) a peer node's copy."""
+        key = ModelKey(*key)
+        if self.mrm is None:
+            return ((self.disk is not None and self.disk.contains(key))
+                    or (self.objectstore is not None
+                        and self.objectstore.contains(key)))
+        if self.mrm.resolvable(key):
+            return True
+        return (self.cluster_node is not None
+                and self.cluster_node.directory.warmest(
+                    key, exclude=self.cluster_node.name) is not None)
+
     def prefetch_models(self, keys: Sequence[ModelKey]) -> list:
         """Node-level warm-up (router pre-dispatch hint)."""
         if self.mrm is None:
             return []
         return [self.mrm.prefetch(ModelKey(*k)) for k in keys
-                if self.mrm.disk.contains(ModelKey(*k))]
+                if self.can_resolve(k)]
 
     def undeploy(self, name: str):
         with self._lock:
@@ -191,29 +219,63 @@ class FaaSPlatform:
         with self.mrm.device.lock:
             return list(self.mrm.device.entries.keys())
 
+    def warmth(self, key: ModelKey) -> int:
+        """``Tier.warmth`` rank of the warmest tier holding ``key`` here:
+        DEVICE=3, HOST=2, DISK=1, absent (CLOUD-only)=0. An entry whose
+        staging is still in flight counts — the router should keep sending
+        requests for that model to the node already paying for it."""
+        if self.mrm is None:
+            return (Tier.DISK.warmth
+                    if self.disk is not None and self.disk.contains(ModelKey(*key))
+                    else 0)
+        key = ModelKey(*key)
+        if self.mrm.device.peek(key) is not None:
+            return Tier.DEVICE.warmth
+        if self.mrm.host.peek(key) is not None:
+            return Tier.HOST.warmth
+        return Tier.DISK.warmth if self.mrm.disk.contains(key) else 0
+
     def load(self) -> int:
         return sum(c.acct.invocations for c in self.containers.values())
 
 
 class Router:
-    """Affinity-aware load balancer over several FaaS nodes."""
+    """Model-affinity load balancer over several FaaS nodes.
 
-    def __init__(self, nodes: Sequence[FaaSPlatform]):
+    ``policy="affinity"`` (default) dispatches to the node holding the
+    request's models at the warmest tier — a device-warm node beats a
+    host-warm node beats a disk-cold one — falling back to least-loaded on
+    ties, and issues prefetch hints to the chosen node so staging overlaps
+    dispatch. ``policy="round_robin"`` is the affinity-blind baseline the
+    cluster benchmark ablates against.
+    """
+
+    def __init__(self, nodes: Sequence[FaaSPlatform], policy: str = "affinity"):
+        if policy not in ("affinity", "round_robin"):
+            raise ValueError(f"unknown routing policy {policy!r}")
         self.nodes = list(nodes)
+        self.policy = policy
+        self._rr = itertools.count()
+        self.dispatches: Dict[str, int] = {n.name: 0 for n in self.nodes}
 
     def route(self, fn_name: str, needed_models: Sequence[ModelKey] = ()) -> FaaSPlatform:
+        candidates = [n for n in self.nodes if fn_name in n.functions]
+        if not candidates:
+            raise KeyError(f"function {fn_name!r} not deployed on any node")
+        if self.policy == "round_robin":
+            return candidates[next(self._rr) % len(candidates)]
+
         def score(node: FaaSPlatform):
-            warm = set(node.advertised_models())
-            affinity = sum(1 for k in needed_models if ModelKey(*k) in warm)
+            affinity = sum(node.warmth(ModelKey(*k)) for k in needed_models)
             return (-affinity, node.load())
 
-        return min((n for n in self.nodes if fn_name in n.functions),
-                   key=score)
+        return min(candidates, key=score)
 
     def invoke(self, fn_name: str, payload=None, needed_models=()):
         """Route, issue prefetch for the needed models on the chosen node,
         then dispatch — staging overlaps the dispatch/queueing latency."""
         node = self.route(fn_name, needed_models)
+        self.dispatches[node.name] = self.dispatches.get(node.name, 0) + 1
         if needed_models:
             node.prefetch_models(needed_models)
         return node.invoke(fn_name, payload)

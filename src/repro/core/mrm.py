@@ -6,8 +6,11 @@ Fig. 7 state machine as a :class:`LoadFuture`:
 
   DEVICE hit             -> refcount++, hand out shared device arrays
   DEVICE miss / HOST hit -> make room on device, stage host->device
-  HOST+DEVICE miss       -> disk (or cloud download), then a *chunked
-                            pipelined* disk->host->device staging chain
+  HOST+DEVICE miss       -> disk, then a *chunked pipelined*
+                            disk->host->device staging chain
+  DISK miss              -> fetch from a peer node or the CLOUD tier
+                            (whichever the cost model says is cheaper),
+                            then the cold chain above (DESIGN.md §6)
 
 Models are addressed by namespace ``(framework, name, version)``. Entries
 with live references are never evicted; concurrent opens of the same model
@@ -36,6 +39,7 @@ from repro.core.store import CloudStore, DiskStore, ModelFile, _np_dtype
 
 
 class ModelKey(NamedTuple):
+    """Namespace address of a model everywhere in the system."""
     framework: str
     name: str
     version: str = "1"
@@ -43,8 +47,12 @@ class ModelKey(NamedTuple):
 
 @dataclass
 class OpenTimings:
+    """Per-stage decomposition of one open — measured seconds where the
+    work is real on this host (disk, deserialize), modeled where it is not
+    (cloud/peer links, TPU H2D); ``tier_hit`` names the resolving tier."""
     tier_hit: str = ""
-    cloud_s: float = 0.0          # modeled download time
+    cloud_s: float = 0.0          # modeled CLOUD-tier download time
+    peer_s: float = 0.0           # modeled peer-to-peer fetch time (cluster)
     disk_read_s: float = 0.0      # measured file -> host bytes
     deserialize_s: float = 0.0    # measured unmarshal -> arrays
     h2d_measured_s: float = 0.0   # measured jnp staging on this host
@@ -59,12 +67,14 @@ class OpenTimings:
     staging_pipelined_modeled_s: float = 0.0
 
     def modeled_total(self) -> float:
-        return (self.cloud_s + self.disk_read_s + self.deserialize_s
-                + self.h2d_modeled_s + self.share_overhead_s)
+        return (self.cloud_s + self.peer_s + self.disk_read_s
+                + self.deserialize_s + self.h2d_modeled_s
+                + self.share_overhead_s)
 
 
 @dataclass
 class HostModel:
+    """HOST-tier payload: deserialized arrays (shm-backed in ipc mode)."""
     arrays: Dict[str, np.ndarray]
     nbytes: int
     shm_segments: list = field(default_factory=list)  # ShmSegment list (ipc mode)
@@ -78,6 +88,9 @@ class HostModel:
 
 @dataclass
 class ModelHandle:
+    """A refcounted lease on a tier-resident model: ``weights`` alias the
+    MRM's shared arrays — closing the handle releases the reference, never
+    the copy."""
     handle_id: int
     key: ModelKey
     weights: Dict[str, object]   # name -> jax.Array (device) / np.ndarray (host)
@@ -188,10 +201,16 @@ class MRM:
                  demote_on_evict: bool = True,
                  pipelined_staging: bool = True,
                  staging_chunk_bytes: int = PIPELINE_CHUNK_BYTES,
-                 pipeline_depth: int = 2):
+                 pipeline_depth: int = 2,
+                 objectstore=None,
+                 writeback_to_cloud: bool = False):
         self.disk = disk
         self.cloud = cloud
+        self.objectstore = objectstore  # CLOUD tier (core.objectstore)
         self.hw = hw or get_hardware()
+        # cluster hook (core.cluster): fn(key, timings) -> bool resolving a
+        # DISK miss from a cheaper source (peer link) before the CLOUD tier
+        self.remote_fetch: Optional[Callable] = None
         self.device = TierCache(Tier.DEVICE, device_capacity, policy)
         self.host = TierCache(Tier.HOST, host_capacity, policy)
         self.tiers = TierHierarchy(self.device, self.host,
@@ -213,7 +232,30 @@ class MRM:
             "cloud_downloads": 0, "disk_loads": 0, "h2d_stages": 0,
             "bytes_from_disk": 0, "bytes_h2d": 0,
             "prefetches": 0, "pipelined_loads": 0,
+            "peer_fetches": 0, "cloud_writebacks": 0,
+            # modeled seconds of work this node performed — survives open
+            # coalescing (a coalesced waiter's own timings show a zero-cost
+            # hit; the staging cost lives here, on the node that paid it)
+            "modeled_fetch_s": 0.0, "modeled_stage_s": 0.0,
         }
+        self.writeback_to_cloud = writeback_to_cloud
+        self._wb_queue = None
+        if writeback_to_cloud and objectstore is not None:
+            self._start_writeback()
+
+    def attach_objectstore(self, objectstore) -> None:
+        """Late-bind the CLOUD tier (the ``Cluster.add_node`` path); arms
+        the demotion write-back worker if it was requested at construction."""
+        self.objectstore = objectstore
+        if self.writeback_to_cloud and self._wb_queue is None:
+            self._start_writeback()
+
+    def _start_writeback(self) -> None:
+        import queue
+        self._wb_queue = queue.Queue()
+        self.host.add_listener(self._on_host_remove)
+        threading.Thread(target=self._writeback_worker, daemon=True,
+                         name="mrm-writeback").start()
 
     # ------------------------------------------------------------------ API
     def open_async(self, key: ModelKey, activation_bytes: int = 0,
@@ -404,7 +446,9 @@ class MRM:
 
         fresh = host_entry is None
         if fresh:
-            timings.tier_hit = "disk" if self.disk.contains(key) else "cloud"
+            # provisional: _ensure_on_disk overwrites with "peer"/"cloud"
+            # when the model has to be fetched from outside this node
+            timings.tier_hit = "disk"
             if fut.tier == "device" and self.pipelined_staging:
                 return self._load_cold_pipelined(fut)
             host_entry = self._load_host(key, timings, fut)  # still pinned
@@ -428,14 +472,58 @@ class MRM:
         return self._finish_entry(fut, self.device, dev_entry, unpin=True)
 
     def _ensure_on_disk(self, key, timings):
+        """DISK-miss fall-through (DESIGN.md §6): peer link first when a
+        cluster hook is attached and picks a cheaper source, then the CLOUD
+        tier (content-addressed ObjectStore, or the legacy CloudStore)."""
         if self.disk.contains(key):
             return
-        if self.cloud is None or not self.cloud.contains(key):
-            raise FileNotFoundError(f"model {key} not found in any tier")
-        modeled, _ = self.cloud.download(key, self.disk)
-        timings.cloud_s = modeled
-        with self._lock:
-            self.metrics["cloud_downloads"] += 1
+        if self.remote_fetch is not None and self.remote_fetch(key, timings):
+            timings.tier_hit = "peer"
+            return
+        for store in (self.cloud, self.objectstore):
+            if store is None or not store.contains(key):
+                continue
+            download = getattr(store, "fetch", None) or store.download
+            modeled, _ = download(key, self.disk)
+            timings.cloud_s = modeled
+            timings.tier_hit = "cloud"
+            with self._lock:
+                self.metrics["cloud_downloads"] += 1
+                self.metrics["modeled_fetch_s"] += modeled
+            return
+        raise FileNotFoundError(f"model {key} not found in any tier")
+
+    # ------------------------------------------------ CLOUD-tier write-back
+    def _on_host_remove(self, event: str, entry):
+        """Host-cache listener (fires under the host lock — enqueue only).
+
+        A HOST victim whose payload was live is a *demotion to disk*; with
+        ``writeback_to_cloud`` the MRM also publishes it to the CLOUD tier
+        in the background so peers/cold nodes can fetch it without touching
+        this node. Placeholder rollbacks (payload None) are not demotions.
+        """
+        if event == "remove" and entry.payload is not None:
+            self._wb_queue.put(entry.key)
+
+    def _writeback_worker(self):
+        while True:
+            key = self._wb_queue.get()
+            try:
+                # models are version-keyed and immutable: a key already in
+                # the object store needs no re-upload
+                if self.disk.contains(key) and not self.objectstore.contains(key):
+                    self.objectstore.put_file(key, self.disk.path_for(key))
+                    with self._lock:
+                        self.metrics["cloud_writebacks"] += 1
+            except Exception:  # noqa: BLE001 — write-back is best-effort
+                pass
+            finally:
+                self._wb_queue.task_done()
+
+    def flush_writebacks(self):
+        """Block until every queued CLOUD write-back has been processed."""
+        if self._wb_queue is not None:
+            self._wb_queue.join()
 
     def _shm_views(self, key, specs):
         """One segment with tensors packed back-to-back. ``specs`` is
@@ -594,6 +682,7 @@ class MRM:
             self.metrics["h2d_stages"] += 1
             self.metrics["bytes_h2d"] += nbytes
             self.metrics["pipelined_loads"] += 1
+            self.metrics["modeled_stage_s"] += timings.staging_pipelined_modeled_s
         return self._finish_entry(fut, self.device, d_entry, unpin=True)
 
     def _load_host(self, key, timings, fut: Optional[LoadFuture] = None):
@@ -652,6 +741,8 @@ class MRM:
         with self._lock:
             self.metrics["disk_loads"] += 1
             self.metrics["bytes_from_disk"] += nbytes
+            self.metrics["modeled_stage_s"] += (
+                self.hw.disk_time(nbytes) + self.hw.deserialize_time(nbytes))
         return entry
 
     def _stage_device(self, key, host_entry, activation_bytes, timings,
@@ -708,6 +799,7 @@ class MRM:
         with self._lock:
             self.metrics["h2d_stages"] += 1
             self.metrics["bytes_h2d"] += nbytes
+            self.metrics["modeled_stage_s"] += timings.h2d_modeled_s
         entry.payload = weights
         # still pinned: _finish_entry releases the pin atomically with the
         # handle refcount (or leaves a prefetch entry unpinned+evictable)
@@ -736,6 +828,15 @@ class MRM:
         return HostModel(arrays, victim.nbytes, segs)
 
     # ----------------------------------------------------------- inspection
+    def resolvable(self, key: ModelKey) -> bool:
+        """Whether some tier this MRM can reach directly (DISK or CLOUD)
+        holds ``key`` — cluster peers are the ClusterNode's business."""
+        key = ModelKey(*key)
+        return (self.disk.contains(key)
+                or (self.cloud is not None and self.cloud.contains(key))
+                or (self.objectstore is not None
+                    and self.objectstore.contains(key)))
+
     def resident(self, key: ModelKey, tier: Tier) -> bool:
         key = ModelKey(*key)
         cache = self.device if tier == Tier.DEVICE else self.host

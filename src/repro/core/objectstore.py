@@ -1,0 +1,174 @@
+"""Content-addressed CLOUD-tier object store (paper §3, DESIGN.md §6).
+
+The bottom of the four-tier hierarchy ``DEVICE -> HOST -> DISK -> CLOUD``:
+a blob store addressed by content digest, the reproduction's stand-in for
+S3/GCS model repositories. Blobs live under ``blobs/<digest[:2]>/<digest>``
+and a JSON manifest maps model keys to ``{digest, nbytes}``, so two model
+versions with byte-identical weights share one blob (content dedup) and a
+``put`` of bytes the store already holds costs only a manifest update.
+
+The backend is a local directory — tests run hermetically — while the
+network is *modeled*: ``fetch``/``put_file`` return the modeled transfer
+seconds at ``bw``/``rtt`` and optionally sleep-throttle so benchmark wall
+clocks reflect the simulated link (same contract as ``CloudStore``).
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import tempfile
+import threading
+import time
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.core.store import DiskStore, write_model
+
+
+def _key_id(key) -> str:
+    fw, name, ver = key
+    return f"{fw}/{name}@{ver}"
+
+
+class ObjectStore:
+    """Content-addressed put/get over a local-dir backend. Thread-safe."""
+
+    def __init__(self, root: str, bw: float = 1e9, rtt: float = 20e-3,
+                 simulate_time: bool = False):
+        self.root = root
+        self.blob_dir = os.path.join(root, "blobs")
+        self.manifest_path = os.path.join(root, "manifest.json")
+        self.bw, self.rtt = bw, rtt
+        self.simulate_time = simulate_time
+        self._lock = threading.RLock()
+        os.makedirs(self.blob_dir, exist_ok=True)
+        self._manifest: Dict[str, dict] = {}
+        if os.path.exists(self.manifest_path):
+            with open(self.manifest_path) as f:
+                self._manifest = json.load(f)
+        # metrics
+        self.puts = 0
+        self.fetches = 0
+        self.dedup_hits = 0
+        self.bytes_fetched = 0
+
+    # -- internals ----------------------------------------------------------
+    def _blob_path(self, digest: str) -> str:
+        return os.path.join(self.blob_dir, digest[:2], digest)
+
+    def _save_manifest_locked(self):
+        tmp = self.manifest_path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(self._manifest, f, indent=1)
+        os.replace(tmp, self.manifest_path)
+
+    def _throttle(self, nbytes: int, elapsed: float) -> float:
+        modeled = self.rtt + nbytes / self.bw
+        if self.simulate_time and elapsed < modeled:
+            time.sleep(min(modeled - elapsed, 0.25))  # cap: keep benches fast
+        return modeled
+
+    # -- writes -------------------------------------------------------------
+    def put_file(self, key, path: str) -> str:
+        """Upload a serialized ``.trims`` file; returns its content digest.
+
+        A blob the store already holds is not re-copied (dedup) — only the
+        manifest entry is written.
+        """
+        h = hashlib.sha256()
+        with open(path, "rb") as f:
+            for chunk in iter(lambda: f.read(8 << 20), b""):
+                h.update(chunk)
+        digest = h.hexdigest()
+        nbytes = os.path.getsize(path)
+        t0 = time.perf_counter()
+        with self._lock:
+            self.puts += 1
+            blob = self._blob_path(digest)
+            if os.path.exists(blob):
+                self.dedup_hits += 1
+            else:
+                os.makedirs(os.path.dirname(blob), exist_ok=True)
+                shutil.copyfile(path, blob + ".tmp")
+                os.replace(blob + ".tmp", blob)
+            self._manifest[_key_id(key)] = {"digest": digest, "nbytes": nbytes}
+            self._save_manifest_locked()
+        self._throttle(nbytes, time.perf_counter() - t0)
+        return digest
+
+    def put(self, key, tensors: Dict[str, np.ndarray], meta=None) -> str:
+        """Serialize ``tensors`` to the .trims format and upload."""
+        fd, tmp = tempfile.mkstemp(suffix=".trims", dir=self.root)
+        os.close(fd)
+        try:
+            write_model(tmp, tensors, meta)
+            return self.put_file(key, tmp)
+        finally:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+
+    def delete(self, key):
+        """Drop the manifest entry (blobs stay — other keys may share them)."""
+        with self._lock:
+            if self._manifest.pop(_key_id(key), None) is not None:
+                self._save_manifest_locked()
+
+    # -- reads --------------------------------------------------------------
+    def contains(self, key) -> bool:
+        with self._lock:
+            return _key_id(key) in self._manifest
+
+    def stat(self, key) -> Optional[dict]:
+        """``{"digest", "nbytes"}`` for ``key``, or None."""
+        with self._lock:
+            e = self._manifest.get(_key_id(key))
+            return dict(e) if e is not None else None
+
+    def nbytes(self, key) -> int:
+        st = self.stat(key)
+        if st is None:
+            raise KeyError(f"{key} not in object store")
+        return st["nbytes"]
+
+    def fetch(self, key, dest: DiskStore) -> Tuple[float, int]:
+        """Download ``key`` into a local DiskStore.
+
+        Returns ``(modeled_seconds, nbytes)`` — the CLOUD leg of a cold
+        open's timeline.
+        """
+        st = self.stat(key)
+        if st is None:
+            raise KeyError(f"{key} not in object store")
+        src = self._blob_path(st["digest"])
+        dst = dest.path_for(key)
+        os.makedirs(os.path.dirname(dst), exist_ok=True)
+        t0 = time.perf_counter()
+        shutil.copyfile(src, dst + ".tmp")
+        os.replace(dst + ".tmp", dst)
+        modeled = self._throttle(st["nbytes"], time.perf_counter() - t0)
+        with self._lock:
+            self.fetches += 1
+            self.bytes_fetched += st["nbytes"]
+        return modeled, st["nbytes"]
+
+    def keys(self):
+        with self._lock:
+            out = []
+            for kid in self._manifest:
+                fw, rest = kid.split("/", 1)
+                name, ver = rest.rsplit("@", 1)
+                out.append((fw, name, ver))
+            return out
+
+    def stats(self) -> dict:
+        with self._lock:
+            blobs = {e["digest"] for e in self._manifest.values()}
+            return {"keys": len(self._manifest), "blobs": len(blobs),
+                    "puts": self.puts, "dedup_hits": self.dedup_hits,
+                    "fetches": self.fetches,
+                    "bytes_fetched": self.bytes_fetched}

@@ -9,9 +9,10 @@ Format (``.trims`` files)::
     payload: 64-byte-aligned raw little-endian tensor bytes
 
 Per-tensor offsets enable **layer-granularity** reads (paper §4.2 sharing
-granularity) and ``np.memmap`` enables zero-copy disk->host mapping. The
-"cloud" tier is a directory behind a bandwidth/latency throttle — the
-paper's remote model repository.
+granularity) and ``np.memmap`` enables zero-copy disk->host mapping.
+``CloudStore`` here is the legacy throttled-directory remote tier; the
+real CLOUD tier is the content-addressed ``repro.core.objectstore``
+(DESIGN.md §6), which new code should prefer.
 """
 from __future__ import annotations
 

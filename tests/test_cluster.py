@@ -1,0 +1,325 @@
+"""CLOUD object-store tier + cluster-wide sharing (DESIGN.md §6).
+
+Covers the four-tier fall-through (DISK miss -> peer link -> CLOUD), the
+content-addressed ObjectStore, directory consistency across demotion and
+eviction, CLOUD write-back on host demotion, and warmest-tier router
+affinity vs the round-robin baseline.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (Cluster, ClusterDirectory, ClusterNode, DiskStore,
+                        FaaSPlatform, HardwareModel, MRM, ModelKey,
+                        ObjectStore, Router, Tier)
+
+MB = 1 << 20
+
+
+def _tensors(nbytes=1 * MB, n=4, seed=0):
+    rng = np.random.default_rng(seed)
+    per = nbytes // n // 4
+    return {f"w{i}": rng.standard_normal(per).astype(np.float32) for i in range(n)}
+
+
+def _mrm(disk, dev=8 * MB, host=32 * MB, **kw):
+    return MRM(disk, device_capacity=dev, host_capacity=host, **kw)
+
+
+@pytest.fixture
+def objstore(tmp_path):
+    return ObjectStore(str(tmp_path / "cloud"))
+
+
+# ------------------------------------------------------------- object store
+class TestObjectStore:
+    def test_put_fetch_roundtrip(self, tmp_path, objstore):
+        key = ModelKey("jax", "m", "1")
+        tensors = _tensors()
+        objstore.put(key, tensors)
+        assert objstore.contains(key)
+        assert objstore.nbytes(key) > 0
+
+        dest = DiskStore(str(tmp_path / "disk"))
+        modeled, nbytes = objstore.fetch(key, dest)
+        assert dest.contains(key)
+        assert modeled >= objstore.rtt
+        got = dest.open(key).read_all(verify=True)
+        np.testing.assert_array_equal(got["w0"], tensors["w0"])
+
+    def test_content_dedup_across_keys(self, objstore):
+        tensors = _tensors(seed=7)
+        d1 = objstore.put(ModelKey("jax", "m", "1"), tensors)
+        d2 = objstore.put(ModelKey("jax", "m", "2"), tensors)
+        assert d1 == d2
+        st = objstore.stats()
+        assert st["keys"] == 2 and st["blobs"] == 1 and st["dedup_hits"] == 1
+
+    def test_manifest_persists_across_instances(self, tmp_path, objstore):
+        key = ModelKey("jax", "m", "1")
+        objstore.put(key, _tensors())
+        reopened = ObjectStore(objstore.root)
+        assert reopened.contains(key)
+        assert reopened.keys() == [("jax", "m", "1")]
+
+    def test_missing_key_raises(self, tmp_path, objstore):
+        with pytest.raises(KeyError):
+            objstore.fetch(ModelKey("jax", "nope"), DiskStore(str(tmp_path / "d")))
+
+
+# --------------------------------------------------- CLOUD tier fall-through
+class TestCloudFallthrough:
+    def test_cold_miss_falls_through_to_objectstore(self, tmp_path, objstore):
+        """DISK miss + CLOUD hit: the MRM downloads into local storage and
+        the open completes with the modeled cloud leg in its timings."""
+        key = ModelKey("jax", "m", "1")
+        objstore.put(key, _tensors())
+        disk = DiskStore(str(tmp_path / "disk"))
+        mrm = _mrm(disk, objectstore=objstore)
+        h = mrm.open(key)
+        assert h.timings.tier_hit == "cloud"
+        assert h.timings.cloud_s > 0
+        assert disk.contains(key)  # landed on local storage on the way up
+        assert mrm.metrics["cloud_downloads"] == 1
+        # second open: device-warm, no second download
+        h2 = mrm.open(key)
+        assert h2.timings.tier_hit == "device"
+        assert mrm.metrics["cloud_downloads"] == 1
+        mrm.close(h)
+        mrm.close(h2)
+
+    def test_cold_load_baseline_four_tier_parity(self, tmp_path, objstore):
+        """The no-TrIMS baseline can also fall through to CLOUD — and pays
+        the modeled download on EVERY cold start (nothing persists)."""
+        from repro.core import cold_load
+        key = ModelKey("jax", "m", "1")
+        objstore.put(key, _tensors())
+        disk = DiskStore(str(tmp_path / "disk"))
+        m = cold_load(disk, key, objectstore=objstore)
+        assert m.timings.cloud_s > 0 and not m.via_trims
+        np.testing.assert_array_equal(np.asarray(m.weights["w0"]),
+                                      _tensors()["w0"])
+
+    def test_baseline_platform_resolves_cloud_only_model(self, tmp_path,
+                                                         objstore):
+        """An un-TrIMSed FaaSPlatform with a CLOUD tier serves a model its
+        disk has never seen — and still pays a cold start per request."""
+        key = ModelKey("jax", "m", "1")
+        objstore.put(key, _tensors())
+        platform = FaaSPlatform(mrm=None,
+                                disk=DiskStore(str(tmp_path / "disk")),
+                                objectstore=objstore)
+        assert platform.can_resolve(key)
+
+        def fn(ctx, payload):
+            m = ctx.load_model("jax", "m")
+            ctx.unload_model(m)
+            return m.nbytes
+
+        platform.deploy("f", fn, use_trims=False, prewarm=False)
+        assert platform.invoke("f") > 0
+        assert platform.containers["f"].acct.cold_starts == 1
+
+    def test_miss_everywhere_still_raises(self, tmp_path, objstore):
+        mrm = _mrm(DiskStore(str(tmp_path / "disk")), objectstore=objstore)
+        with pytest.raises(FileNotFoundError):
+            mrm.open(ModelKey("jax", "nope"))
+
+    def test_writeback_on_host_demotion(self, tmp_path):
+        """A HOST victim (demoted to disk-only) is published to the CLOUD
+        tier in the background when write-back is enabled."""
+        obj = ObjectStore(str(tmp_path / "cloud"))
+        disk = DiskStore(str(tmp_path / "disk"))
+        a, b, c = (ModelKey("jax", n) for n in "abc")
+        for i, k in enumerate((a, b, c)):
+            disk.put(k, _tensors(seed=i))
+        mrm = _mrm(disk, dev=int(1.5 * MB), host=int(2.5 * MB),
+                   objectstore=obj, writeback_to_cloud=True)
+        for k in (a, b, c):  # host fits 2: loading c evicts a's host copy
+            mrm.close(mrm.open(k))
+        mrm.flush_writebacks()
+        assert obj.contains(a)
+        assert mrm.metrics["cloud_writebacks"] >= 1
+
+    def test_writeback_arms_when_objectstore_attached_late(self, tmp_path):
+        """``Cluster.add_node`` binds the objectstore after MRM
+        construction; a write-back requested up front must still arm."""
+        obj = ObjectStore(str(tmp_path / "cloud"))
+        disk = DiskStore(str(tmp_path / "disk"))
+        a, b, c = (ModelKey("jax", n) for n in "abc")
+        for i, k in enumerate((a, b, c)):
+            disk.put(k, _tensors(seed=i))
+        mrm = _mrm(disk, dev=int(1.5 * MB), host=int(2.5 * MB),
+                   writeback_to_cloud=True)
+        Cluster(objectstore=obj).add_node("node0", mrm)
+        for k in (a, b, c):
+            mrm.close(mrm.open(k))
+        mrm.flush_writebacks()
+        assert obj.contains(a)
+
+
+# ------------------------------------------------------- cluster + directory
+def _cluster(tmp_path, objstore, n=2, hw=None, populate=(), **mrm_kw):
+    """n empty-disk nodes sharing one directory + object store.
+
+    Datasheet-default HardwareModel (not the measured one): peer-vs-cloud
+    source selection must be deterministic across hosts."""
+    for key, seed in populate:
+        objstore.put(key, _tensors(seed=seed))
+    cluster = Cluster(objectstore=objstore)
+    for i in range(n):
+        mrm = _mrm(DiskStore(str(tmp_path / f"disk{i}")),
+                   hw=hw or HardwareModel(), **mrm_kw)
+        cluster.add_node(f"node{i}", mrm)
+    return cluster
+
+
+class TestClusterFetch:
+    def test_peer_fetch_preferred_when_cheaper(self, tmp_path, objstore):
+        """Default link speeds: intra-cluster >> cloud, so the second node
+        pulls from its peer's copy instead of re-downloading."""
+        key = ModelKey("jax", "m", "1")
+        cluster = _cluster(tmp_path, objstore, populate=[(key, 0)])
+        n0, n1 = cluster.node("node0"), cluster.node("node1")
+
+        h0 = n0.mrm.open(key)       # cluster-cold: pays the cloud leg
+        assert h0.timings.tier_hit == "cloud"
+        h1 = n1.mrm.open(key)       # peer-warm: pulls over the fast link
+        assert h1.timings.tier_hit == "peer"
+        assert 0 < h1.timings.peer_s < h0.timings.cloud_s
+        assert n1.metrics["peer_fetches"] == 1
+        assert n0.metrics["peer_serves"] == 1
+        assert n1.mrm.metrics["cloud_downloads"] == 0
+        np.testing.assert_array_equal(np.asarray(h0.weights["w0"]),
+                                      np.asarray(h1.weights["w0"]))
+
+    def test_cloud_preferred_when_peer_link_slow(self, tmp_path, objstore):
+        """Cost-model source selection: a saturated/slow peer link loses to
+        the object store and the node falls through to CLOUD."""
+        hw = HardwareModel(peer_bw=1e6, peer_rtt=1.0)  # degraded cluster link
+        key = ModelKey("jax", "m", "1")
+        cluster = _cluster(tmp_path, objstore, hw=hw, populate=[(key, 0)])
+        n0, n1 = cluster.node("node0"), cluster.node("node1")
+        n0.mrm.close(n0.mrm.open(key))
+        h1 = n1.mrm.open(key)
+        assert h1.timings.tier_hit == "cloud"
+        assert n1.metrics["peer_fetches"] == 0
+        assert n1.mrm.metrics["cloud_downloads"] == 1
+
+    def test_stale_directory_hint_falls_back_to_cloud(self, tmp_path, objstore):
+        """Consistency rule: hints are advisory. A holder whose disk copy
+        vanished is skipped and the fetch falls through to CLOUD."""
+        key = ModelKey("jax", "m", "1")
+        cluster = _cluster(tmp_path, objstore, populate=[(key, 0)])
+        n0, n1 = cluster.node("node0"), cluster.node("node1")
+        n0.mrm.close(n0.mrm.open(key))
+        n0.mrm.disk.delete(key)     # directory still says node0 holds it
+        h1 = n1.mrm.open(key)
+        assert h1.timings.tier_hit == "cloud"
+        assert n1.metrics["peer_fetches"] == 0
+
+
+class TestDirectoryConsistency:
+    def test_directory_tracks_load_demotion_eviction(self, tmp_path, objstore):
+        """The directory follows a model down the hierarchy: DEVICE on load,
+        HOST after device eviction (demotion), DISK after host eviction."""
+        a, b, c = (ModelKey("jax", n) for n in "abc")
+        cluster = _cluster(tmp_path, objstore, n=1,
+                           populate=[(a, 1), (b, 2), (c, 3)],
+                           dev=int(1.5 * MB), host=int(2.5 * MB))
+        node = cluster.node("node0")
+        d = cluster.directory
+
+        node.mrm.close(node.mrm.open(a))
+        assert d.tier_on(a, "node0") == Tier.DEVICE
+
+        node.mrm.close(node.mrm.open(b))   # evicts a: DEVICE -> HOST
+        assert d.tier_on(a, "node0") == Tier.HOST
+        assert d.tier_on(b, "node0") == Tier.DEVICE
+
+        node.mrm.close(node.mrm.open(c))   # host is full: a falls to DISK
+        assert d.tier_on(a, "node0") == Tier.DISK
+        assert node.resident_tier(a) == Tier.DISK
+
+    def test_drop_node_withdraws_placements_and_detaches(self, tmp_path,
+                                                         objstore):
+        key = ModelKey("jax", "m", "1")
+        other = ModelKey("jax", "other", "1")
+        cluster = _cluster(tmp_path, objstore, populate=[(key, 0), (other, 1)])
+        n0 = cluster.node("node0")
+        n0.mrm.close(n0.mrm.open(key))
+        assert cluster.directory.warmest(key) is not None
+        cluster.directory.drop_node("node0")
+        assert cluster.directory.warmest(key) is None
+        # detached: later stagings on the dropped node must NOT republish
+        n0.mrm.close(n0.mrm.open(other))
+        assert cluster.directory.tier_on(other, "node0") is None
+
+    def test_duplicate_node_name_rejected(self, tmp_path):
+        directory = ClusterDirectory()
+        mrm = _mrm(DiskStore(str(tmp_path / "d0")))
+        ClusterNode("n", mrm, directory)
+        with pytest.raises(KeyError):
+            ClusterNode("n", _mrm(DiskStore(str(tmp_path / "d1"))), directory)
+
+
+# ------------------------------------------------------------ router affinity
+def _platforms(tmp_path, n=3, model_keys=(), objstore=None):
+    """n platforms; every disk holds every model (warmth comes from tiers)."""
+    cluster = Cluster(objectstore=objstore) if objstore is not None else None
+    nodes = []
+    for i in range(n):
+        disk = DiskStore(str(tmp_path / f"disk{i}"))
+        for j, k in enumerate(model_keys):
+            disk.put(k, _tensors(seed=j))
+        mrm = _mrm(disk)
+        cn = cluster.add_node(f"node{i}", mrm) if cluster is not None else None
+        node = FaaSPlatform(mrm, name=f"node{i}", cluster_node=cn)
+        node.deploy("f", lambda ctx, p: ctx.load_model(*p).nbytes,
+                    prewarm=False)
+        nodes.append(node)
+    return nodes
+
+
+class TestRouterAffinity:
+    def test_affinity_picks_warmest_node(self, tmp_path):
+        key = ModelKey("jax", "m")
+        nodes = _platforms(tmp_path, model_keys=[key])
+        # warm node1 at HOST and node2 at DEVICE; node0 stays disk-cold
+        nodes[1].mrm.prefetch(key, tier="host").result(timeout=30)
+        nodes[2].mrm.prefetch(key).result(timeout=30)
+        router = Router(nodes)
+        assert router.route("f", [key]) is nodes[2]   # DEVICE beats HOST
+        nodes[2].mrm.device.remove(key)
+        assert router.route("f", [key]) is nodes[1]   # HOST beats DISK
+
+    def test_affinity_sticks_after_first_dispatch(self, tmp_path):
+        key = ModelKey("jax", "m")
+        nodes = _platforms(tmp_path, model_keys=[key])
+        router = Router(nodes)
+        for _ in range(4):
+            router.invoke("f", ("jax", "m"), needed_models=[key])
+        # one node took the cold load; everyone else stayed idle
+        assert sorted(router.dispatches.values()) == [0, 0, 4]
+
+    def test_round_robin_spreads_blindly(self, tmp_path):
+        key = ModelKey("jax", "m")
+        nodes = _platforms(tmp_path, model_keys=[key])
+        router = Router(nodes, policy="round_robin")
+        for _ in range(6):
+            router.invoke("f", ("jax", "m"), needed_models=[key])
+        assert sorted(router.dispatches.values()) == [2, 2, 2]
+
+    def test_prefetch_hint_reaches_cluster_source(self, tmp_path, objstore):
+        """Deploy-prewarm on a disk-cold clustered node resolves via the
+        directory/CLOUD instead of being skipped."""
+        key = ModelKey("jax", "m", "1")
+        objstore.put(key, _tensors())
+        cluster = Cluster(objectstore=objstore)
+        mrm = _mrm(DiskStore(str(tmp_path / "disk0")))
+        cn = cluster.add_node("node0", mrm)
+        node = FaaSPlatform(mrm, name="node0", cluster_node=cn)
+        assert node.can_resolve(key)
+        futs = node.prefetch_models([key])
+        assert len(futs) == 1
+        futs[0].result(timeout=30)
+        assert mrm.resident(key, Tier.DEVICE)
