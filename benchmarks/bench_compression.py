@@ -1,0 +1,186 @@
+"""Compression-aware cloud/peer transfer ablation: codec x ratio x link bw.
+
+The CLOUD and peer legs are bandwidth-bound (DESIGN.md §6), so storing
+blobs compressed converts ratio directly into wire seconds — *if* the
+decompress runs as an overlapped pipeline stage (DESIGN.md §4). Two parts:
+
+  * **modeled sweep** — ``HardwareModel.cloud_fetch_time(nbytes, ratio)``
+    across codec ratio x link bandwidth: pipelined compressed fetch vs the
+    uncompressed baseline and vs serial (download-then-inflate). Shows the
+    crossover: compression wins while the wire is the max-stage and stops
+    paying once ``link_bw`` exceeds ``decompress_bw``.
+  * **mechanism** — a real quantized-weight proxy model through a
+    compressed ObjectStore (zlib/lzma) and over a 2-node peer wire:
+    measured ratio, wire bytes, and ``PipelineReport.overlap_s() > 0`` —
+    the decompress stage overlaps the transfer instead of serializing.
+
+``--smoke`` shrinks sizes for the CI gate (scripts/ci.sh --fast).
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import tempfile
+
+import numpy as np
+
+from benchmarks.common import write_csv
+from repro.core import (Cluster, DiskStore, HardwareModel, MRM, ModelKey,
+                        ObjectStore, Tier)
+
+RATIOS = (1.0, 1.25, 1.5, 2.0, 3.0, 4.0)
+LINK_BWS = (0.5e9, 1e9, 2e9, 5e9)   # cloud_bw sweep; default decompress 1.5e9
+CODECS = ("zlib", "lzma")
+
+
+def quantized_tensors(total_bytes: int, n: int = 8, levels: int = 64,
+                      seed: int = 0):
+    """Weights quantized to ``levels`` distinct magnitudes: realistic-ish
+    float32 payloads that actually compress (random mantissas do not)."""
+    rng = np.random.default_rng(seed)
+    per = max(1, total_bytes // n // 4)
+    out = {}
+    for i in range(n):
+        x = rng.standard_normal(per).astype(np.float32)
+        out[f"w{i}"] = (np.round(x * levels) / levels).astype(np.float32)
+    return out
+
+
+def sweep_modeled(nbytes: int, verbose: bool = True):
+    """Pipelined compressed fetch vs uncompressed vs serial, per link bw."""
+    rows = []
+    for bw in LINK_BWS:
+        hw = HardwareModel(cloud_bw=bw)
+        base = hw.cloud_fetch_time(nbytes)
+        for ratio in RATIOS:
+            pipelined = hw.cloud_fetch_time(nbytes, ratio=ratio)
+            serial = (hw.cloud_rtt + nbytes / ratio / bw
+                      + (nbytes / hw.decompress_bw if ratio > 1 else 0.0))
+            rows.append({"ablation": "modeled", "link_bw": bw, "ratio": ratio,
+                         "uncompressed_s": base, "pipelined_s": pipelined,
+                         "serial_s": serial, "speedup": base / pipelined})
+            assert pipelined <= serial + 1e-9, \
+                "pipelined decompress must not exceed serial download+inflate"
+        if verbose:
+            by_r = {r["ratio"]: r for r in rows if r["link_bw"] == bw}
+            marks = "  ".join(f"r={r:g}:{by_r[r]['speedup']:.2f}x"
+                              for r in RATIOS)
+            print(f"  link {bw/1e9:4.1f} GB/s  {marks}")
+    # the headline claim: at cloud bandwidth, ratio >= 1.5 is a pure win
+    for r in rows:
+        if r["link_bw"] <= 1e9 and r["ratio"] >= 1.5:
+            assert r["pipelined_s"] < r["uncompressed_s"], \
+                "compressed pipelined fetch must beat uncompressed at cloud bw"
+    return rows
+
+
+def run_mechanism(root: str, total_bytes: int, chunk_bytes: int,
+                  verbose: bool = True):
+    """Real compressed fetch + peer wire on this host (proxy-sized)."""
+    rows = []
+    tensors = quantized_tensors(total_bytes)
+    key = ModelKey("jax", "quantized", "1")
+    for codec in CODECS:
+        cdir = os.path.join(root, codec)
+        obj = ObjectStore(os.path.join(cdir, "cloud"), codec=codec,
+                          chunk_bytes=chunk_bytes)
+        obj.put(key, tensors)
+        st = obj.stat(key)
+        ratio = st["nbytes"] / max(1, st["stored_nbytes"])
+        sink = []
+        modeled, nbytes = obj.fetch(key, DiskStore(os.path.join(cdir, "disk")),
+                                    report_out=sink)
+        report = sink[0]
+        uncompressed_s = obj.rtt + nbytes / obj.bw
+        row = {"ablation": "mechanism", "codec": codec, "ratio": ratio,
+               "nbytes": nbytes, "stored_nbytes": st["stored_nbytes"],
+               "modeled_fetch_s": modeled, "uncompressed_fetch_s": uncompressed_s,
+               "chunks": report.n_chunks, "overlap_s": report.overlap_s(),
+               "decompress_busy_s": report.stage("decompress").busy_s}
+        rows.append(row)
+        if verbose:
+            print(f"  {codec:<5} ratio {ratio:5.2f}x  modeled fetch "
+                  f"{modeled*1e3:7.1f}ms vs {uncompressed_s*1e3:7.1f}ms raw  "
+                  f"chunks {report.n_chunks}  overlap {report.overlap_s()*1e3:6.1f}ms")
+        assert report.n_chunks >= 2, "mechanism run must actually chunk"
+        # strict overlap is a scheduling property: on a single-CPU box the
+        # stage threads can legitimately serialize, so only gate it where
+        # parallel progress is actually possible
+        if (os.cpu_count() or 1) > 1:
+            assert report.overlap_s() > 0, \
+                "decompress stage must overlap the transfer, not serialize"
+        if ratio >= 1.5:
+            assert modeled < uncompressed_s, \
+                "compressed pipelined fetch must beat uncompressed at cloud bw"
+        shutil.rmtree(cdir, ignore_errors=True)
+    return rows
+
+
+def run_peer_wire(root: str, total_bytes: int, verbose: bool = True):
+    """2-node cluster, zlib peer wire: node1 pulls from node0's disk with
+    compress/decompress as overlapped stages; wire bytes shrink by the
+    measured ratio. Slow peer link so the compare actually picks peer+codec."""
+    tensors = quantized_tensors(total_bytes, seed=3)
+    key = ModelKey("jax", "peered", "1")
+    # make the wire the max-stage (fast disks, cloud-class link) so the
+    # cost compare picks the compressed wire — on the default 10 GB/s peer
+    # link the source read caps the stream and raw copies rightly win
+    hw = HardwareModel(peer_bw=0.5e9, disk_bw=5e9, compress_bw=5e9)
+    cluster = Cluster(peer_codec="zlib")
+    for i in range(2):
+        mrm = MRM(DiskStore(os.path.join(root, f"peer{i}")),
+                  device_capacity=4 * total_bytes,
+                  host_capacity=8 * total_bytes, hw=hw)
+        cluster.add_node(f"node{i}", mrm)
+    cluster.node("node0").mrm.disk.put(key, tensors)
+    cluster.directory.publish("node0", key, Tier.DISK)
+    h = cluster.node("node1").mrm.open(key)
+    n1 = cluster.node("node1").stats()
+    row = {"ablation": "peer_wire", "tier_hit": h.timings.tier_hit,
+           "peer_s": h.timings.peer_s,
+           "bytes_from_peers": n1["bytes_from_peers"],
+           "bytes_on_wire": n1["bytes_on_wire"],
+           "wire_ratio": n1["bytes_from_peers"] / max(1, n1["bytes_on_wire"]),
+           "decompress_s": h.timings.decompress_s}
+    cluster.node("node1").mrm.close(h)
+    if verbose:
+        print(f"  peer  tier_hit={row['tier_hit']}  wire "
+              f"{row['bytes_on_wire']/1e6:.2f}MB for "
+              f"{row['bytes_from_peers']/1e6:.2f}MB "
+              f"({row['wire_ratio']:.2f}x)")
+    assert row["tier_hit"] == "peer" and row["wire_ratio"] > 1.0, \
+        "peer wire must move compressed bytes"
+    return [row]
+
+
+def run(smoke: bool = False, verbose: bool = True):
+    total_bytes = (4 << 20) if smoke else (16 << 20)
+    chunk_bytes = (128 << 10) if smoke else (256 << 10)
+    modeled_bytes = (64 << 20) if smoke else (512 << 20)
+    root = tempfile.mkdtemp(prefix="trims_compress_")
+    rows = []
+    try:
+        if verbose:
+            print(f"-- modeled: ratio x link bw "
+                  f"({modeled_bytes >> 20} MiB transfer) --")
+        rows += sweep_modeled(modeled_bytes, verbose=verbose)
+        if verbose:
+            print(f"-- mechanism: real codec fetch "
+                  f"({total_bytes >> 20} MiB proxy, "
+                  f"{chunk_bytes >> 10} KiB chunks) --")
+        rows += run_mechanism(root, total_bytes, chunk_bytes, verbose=verbose)
+        rows += run_peer_wire(root, total_bytes, verbose=verbose)
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+    write_csv("compression_ablation", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes for the CI gate")
+    args = ap.parse_args()
+    run(smoke=args.smoke)
+    print("bench_compression: OK")

@@ -83,6 +83,18 @@ def main() -> None:
                 f"peer_speedup={by_cfg['cloud-only']['modeled_fetch_s'] / by_cfg['warm-peer']['modeled_fetch_s']:.1f}x;"
                 f"affinity_speedup={by_cfg['round_robin']['modeled_total_s'] / by_cfg['affinity']['modeled_total_s']:.1f}x"))
 
+    print("== compression: codec x ratio x link bw ==", flush=True)
+    from benchmarks import bench_compression
+    rows_z = bench_compression.run(smoke=not args.full, verbose=True)
+    mech = [r for r in rows_z if r["ablation"] == "mechanism"]
+    at_cloud = [r for r in rows_z if r["ablation"] == "modeled"
+                and r["link_bw"] == 1e9 and r["ratio"] == 2.0]
+    out.append(("compression_ablation",
+                1e6 * sum(r["modeled_fetch_s"] for r in mech) / max(1, len(mech)),
+                f"modeled_speedup_r2={at_cloud[0]['speedup']:.2f}x;"
+                f"overlap_ms={1e3 * sum(r['overlap_s'] for r in mech):.1f};"
+                f"codecs={','.join(r['codec'] for r in mech)}"))
+
     if not args.skip_serving:
         print("== end-to-end serving (live models) ==", flush=True)
         from benchmarks import bench_serving

@@ -27,8 +27,12 @@ REQUIRED_CONTENT = [
     ("README.md", "ROADMAP.md"),
     ("README.md", "docs/API.md"),
     ("DESIGN.md", "Cloud tier & cluster sharing"),
+    ("DESIGN.md", "decompress"),
+    ("DESIGN.md", "Compressed transfer"),
     (os.path.join("docs", "API.md"), "ClusterDirectory"),
     (os.path.join("docs", "API.md"), "ObjectStore"),
+    (os.path.join("docs", "API.md"), "gc_blobs"),
+    (os.path.join("docs", "API.md"), "codec"),
 ]
 
 LINK_RE = re.compile(r"(?<!\!)\[[^\]]+\]\(([^)\s]+)\)")

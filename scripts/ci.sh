@@ -18,5 +18,8 @@ ARGS=(-x -q)
 if [[ "${1:-}" == "--fast" ]]; then
     shift
     ARGS+=(-m "not slow")
+    # keep the compression ablation importable + its invariants green
+    # (modeled crossover, decompress-stage overlap) without the full sweep
+    python -m benchmarks.bench_compression --smoke
 fi
 exec python -m pytest "${ARGS[@]}" "$@"

@@ -12,7 +12,10 @@ from repro.core.client import (  # noqa: F401
     LoadedModel, TrimsClient, cold_load, free_model, load_model,
 )
 from repro.core.cluster import Cluster, ClusterDirectory, ClusterNode  # noqa: F401
-from repro.core.costmodel import HardwareModel, get_hardware  # noqa: F401
+from repro.core.codec import CODECS, Codec, get_codec, sample_ratio  # noqa: F401
+from repro.core.costmodel import (  # noqa: F401
+    HardwareModel, get_hardware, pipelined_stage_time,
+)
 from repro.core.faas import Container, FaaSPlatform, IsolationError, Router  # noqa: F401
 from repro.core.objectstore import ObjectStore  # noqa: F401
 from repro.core.mrm import (  # noqa: F401

@@ -22,7 +22,10 @@ import threading
 from typing import Dict, List, Optional, Set, Tuple
 
 from repro.core.cache import Tier
+from repro.core.codec import get_codec, sample_ratio
 from repro.core.mrm import MRM, ModelKey
+from repro.core.pipeline import PipelineReport, run_pipeline
+from repro.core.store import atomic_dest_file
 
 
 class ClusterDirectory:
@@ -127,16 +130,29 @@ class ClusterNode:
     """
 
     def __init__(self, name: str, mrm: MRM, directory: ClusterDirectory,
-                 peer_fetch: bool = True):
+                 peer_fetch: bool = True,
+                 peer_codec=None):  # codec name or a tuned Codec instance
         self.name = name
         self.mrm = mrm
         self.directory = directory
         self.hw = mrm.hw
         self.peer_fetch_enabled = peer_fetch
+        # wire codec for peer transfers (None = raw copy). The cost compare
+        # estimates the ratio from the CLOUD manifest when it knows the key
+        # (falls back to sampling the peer's file), and the actual transfer
+        # runs compress/decompress as overlapped pipeline stages.
+        # keep the Codec OBJECT (a tuned instance must not be flattened to
+        # its registry default via the name); peer_codec exposes the name
+        self._peer_codec = get_codec(peer_codec) if peer_codec else None
+        self.peer_codec = self._peer_codec.name if self._peer_codec else None
+        # per-key wire-ratio cache: models are version-keyed and immutable,
+        # so a sampled estimate never goes stale — without it every DISK
+        # miss would re-compress a 1 MiB sample per candidate holder
+        self._ratio_cache: Dict[ModelKey, float] = {}
         # cloud downloads are counted by the MRM (metrics["cloud_downloads"])
         # — the node only tracks the peer traffic it originates/serves
         self.metrics = {"peer_fetches": 0, "peer_serves": 0,
-                        "bytes_from_peers": 0}
+                        "bytes_from_peers": 0, "bytes_on_wire": 0}
         self._metrics_lock = threading.Lock()  # leaf; never held over another
         directory.register(self)
         for key in mrm.disk.keys():
@@ -180,39 +196,119 @@ class ClusterNode:
         return Tier.DISK if self.mrm.disk.contains(key) else None
 
     # -- peer-to-peer fetch ---------------------------------------------------
+    def _wire_ratio(self, key: ModelKey, src_path: str) -> float:
+        """Estimated compression ratio for the peer wire: the CLOUD
+        manifest's real stored size when it recorded the SAME codec this
+        wire uses (a different codec's ratio would distort the compare),
+        else a one-chunk compression sample of the peer's file, memoized
+        per key (content is version-keyed and immutable). 1.0 when the
+        node has no wire codec."""
+        if self.peer_codec is None:
+            return 1.0
+        obj = self.mrm.objectstore
+        if obj is not None and hasattr(obj, "stat"):
+            st = obj.stat(key)
+            if st and st.get("codec", "none") == self.peer_codec:
+                return max(1.0, st["nbytes"] / max(1, st["stored_nbytes"]))
+        ratio = self._ratio_cache.get(key)
+        if ratio is None:
+            ratio = sample_ratio(src_path, self._peer_codec)
+            self._ratio_cache[key] = ratio
+        return ratio
+
     def _cheapest_peer(self, key: ModelKey):
-        """(peer_node, peer_tier, modeled_s, nbytes) or None."""
+        """(peer_node, peer_tier, modeled_s, nbytes, ratio) or None."""
         best = None
         for node_name, tier in self.directory.holders(key, exclude=self.name):
             peer = self.directory.node(node_name)
             if peer is None or not peer.mrm.disk.contains(key):
                 continue  # stale hint — skip, CLOUD fall-through covers us
-            nbytes = os.path.getsize(peer.mrm.disk.path_for(key))
-            t = self.hw.peer_fetch_time(nbytes, peer_disk=tier == Tier.DISK)
+            path = peer.mrm.disk.path_for(key)
+            nbytes = os.path.getsize(path)
+            ratio = self._wire_ratio(key, path)
+            peer_disk = tier == Tier.DISK
+            # a node with a wire codec still sends raw when that is cheaper
+            # (fast links make the compress stage the max-stage)
+            t_raw = self.hw.peer_fetch_time(nbytes, peer_disk=peer_disk)
+            t_comp = self.hw.peer_fetch_time(nbytes, peer_disk=peer_disk,
+                                             ratio=ratio)
+            t, use_ratio = min((t_raw, 1.0), (t_comp, ratio))
             if best is None or t < best[2]:
-                best = (peer, tier, t, nbytes)
+                best = (peer, tier, t, nbytes, use_ratio)
         return best
 
     def _cloud_link_time(self, key: ModelKey, nbytes: int):
         """Modeled seconds to pull ``key`` from the CLOUD tier, using the
         holding store's OWN link constants (they are what the download will
         actually be charged at — the hw constants are only the default the
-        stores were built from). None when no cloud source holds the key."""
+        stores were built from). A compression-aware store reports its
+        pipelined compressed-wire cost (``modeled_fetch_s``). None when no
+        cloud source holds the key."""
         for store in (self.mrm.cloud, self.mrm.objectstore):
             if store is not None and store.contains(key):
+                modeled = getattr(store, "modeled_fetch_s", None)
+                if modeled is not None:
+                    return modeled(key)
                 return store.rtt + nbytes / store.bw
         return None
+
+    def _transfer_compressed(self, src: str, dst_tmp_fd: int
+                             ) -> Tuple[int, PipelineReport]:
+        """Move ``src`` over the modeled peer wire with the node's codec:
+        peer read | compress | decompress | disk write as one chunked
+        pipeline (the wire carries the compress stage's output). Returns
+        (wire_bytes, report)."""
+        comp = self._peer_codec.compressor()
+        decomp = self._peer_codec.decompressor()
+        chunk = self.mrm.staging_chunk_bytes
+        size = os.path.getsize(src)
+        offsets = list(range(0, size, chunk)) or [0]
+        out = os.fdopen(dst_tmp_fd, "wb")
+        try:
+            with open(src, "rb") as fsrc:
+
+                def peer_read(off):
+                    fsrc.seek(off)
+                    return fsrc.read(chunk)
+
+                def compress(data):
+                    return comp.compress(data)
+
+                def decompress(data):
+                    return decomp.decompress(data)
+
+                def disk_write(data):
+                    out.write(data)
+                    return len(data)
+
+                _, report = run_pipeline(
+                    offsets,
+                    [("peer_read", peer_read, len),
+                     ("compress", compress, len),
+                     ("decompress", decompress, len),
+                     ("disk_write", disk_write)],
+                    depth=2)
+            tail = comp.flush()  # the codec's buffered remainder
+            out.write(decomp.decompress(tail))
+            out.write(decomp.flush())
+        finally:
+            out.close()
+        wire_bytes = report.stage("compress").bytes + len(tail)
+        return wire_bytes, report
 
     def fetch_for(self, key: ModelKey, timings) -> bool:
         """MRM ``remote_fetch`` hook: resolve a DISK miss from the cheapest
         source. Returns True when the model was pulled from a peer; False
         hands the miss back to the MRM's CLOUD fall-through (which is also
-        the answer when the cost model says the cloud link is cheaper)."""
+        the answer when the cost model says the cloud link is cheaper).
+        Both sides of the compare are compression-aware: the peer leg at
+        the estimated wire ratio, the cloud leg at the blob's real stored
+        size (DESIGN.md §6)."""
         key = ModelKey(*key)
         best = self._cheapest_peer(key) if self.peer_fetch_enabled else None
         if best is None:
             return False  # the MRM's fall-through pays the CLOUD leg
-        peer, peer_tier, peer_s, nbytes = best
+        peer, peer_tier, peer_s, nbytes, ratio = best
         cloud_s = self._cloud_link_time(key, nbytes)
         source, _ = self.hw.pick_fetch_source(
             nbytes, have_peer=True, have_cloud=cloud_s is not None,
@@ -221,13 +317,26 @@ class ClusterNode:
             return False
         src = peer.mrm.disk.path_for(key)
         dst = self.mrm.disk.path_for(key)
-        os.makedirs(os.path.dirname(dst), exist_ok=True)
-        shutil.copyfile(src, dst + ".tmp")
-        os.replace(dst + ".tmp", dst)
+        # unique temp name: concurrent fetches of one key must not share a
+        # staging file (the loser's replace would raise) — last writer wins
+        with atomic_dest_file(dst, prefix=".peer-") as (fd, tmp):
+            if ratio > 1.0:
+                wire_bytes, report = self._transfer_compressed(src, fd)
+                timings.decompress_s += report.stage("decompress").busy_s
+                timings.stage_overlap_s += report.overlap_s()
+                # re-model at the ratio the wire actually saw
+                peer_s = self.hw.peer_fetch_time(
+                    nbytes, peer_disk=peer_tier == Tier.DISK,
+                    ratio=max(1.0, nbytes / max(1, wire_bytes)))
+            else:
+                os.close(fd)
+                shutil.copyfile(src, tmp)
+                wire_bytes = nbytes
         timings.peer_s = peer_s
         with self._metrics_lock:
             self.metrics["peer_fetches"] += 1
             self.metrics["bytes_from_peers"] += nbytes
+            self.metrics["bytes_on_wire"] += wire_bytes
         with peer._metrics_lock:
             peer.metrics["peer_serves"] += 1
         with self.mrm._lock:
@@ -242,18 +351,26 @@ class ClusterNode:
 
 
 class Cluster:
-    """Convenience wiring: N nodes sharing one directory and CLOUD tier."""
+    """Convenience wiring: N nodes sharing one directory and CLOUD tier.
 
-    def __init__(self, objectstore=None, directory: Optional[ClusterDirectory] = None):
+    ``peer_codec`` is the cluster-wide default wire codec for peer
+    transfers (None = raw copies); ``add_node`` can override per node.
+    """
+
+    def __init__(self, objectstore=None,
+                 directory: Optional[ClusterDirectory] = None,
+                 peer_codec: Optional[str] = None):
         self.directory = directory or ClusterDirectory()
         self.objectstore = objectstore
+        self.peer_codec = peer_codec
         self.nodes: Dict[str, ClusterNode] = {}
 
-    def add_node(self, name: str, mrm: MRM,
-                 peer_fetch: bool = True) -> ClusterNode:
+    def add_node(self, name: str, mrm: MRM, peer_fetch: bool = True,
+                 peer_codec: Optional[str] = None) -> ClusterNode:
         if mrm.objectstore is None and self.objectstore is not None:
             mrm.attach_objectstore(self.objectstore)
-        node = ClusterNode(name, mrm, self.directory, peer_fetch=peer_fetch)
+        node = ClusterNode(name, mrm, self.directory, peer_fetch=peer_fetch,
+                           peer_codec=peer_codec or self.peer_codec)
         self.nodes[name] = node
         return node
 

@@ -24,6 +24,24 @@ ICI_BW_PER_LINK = 50e9         # B/s per link
 H2D_BW = 32e9                  # B/s host->device staging (PCIe gen4 x16 class)
 HBM_BYTES = 16 * 2 ** 30       # 16 GiB HBM per v5e chip
 PIPELINE_CHUNK_BYTES = 4 << 20  # default staging chunk (DESIGN.md §4)
+DECOMPRESS_BW = 1.5e9          # B/s single-stream inflate (zstd-class;
+                               # zlib/lzma measure lower — bench_compression)
+COMPRESS_BW = 400e6            # B/s single-stream deflate (sender side)
+
+
+def pipelined_stage_time(stage_seconds, n_chunks: int,
+                         lat: float = 0.0) -> float:
+    """Chunked-pipeline composition of whole-transfer stage costs.
+
+    ``stage_seconds`` are each stage's seconds for the FULL transfer; cut
+    into ``n_chunks`` chunks the pipeline pays the pipe-fill once plus the
+    max-stage per remaining chunk:
+    ``lat + sum(s/n) + (n-1) * max(s/n)`` — equal to the serial sum at one
+    chunk, approaching ``max(stage_seconds)`` as chunks grow (DESIGN.md §4).
+    """
+    n = max(1, n_chunks)
+    per = [s / n for s in stage_seconds]
+    return lat + sum(per) + (n - 1) * max(per)
 
 
 @dataclass
@@ -43,6 +61,8 @@ class HardwareModel:
     cloud_rtt: float = 20e-3
     peer_bw: float = 10e9           # intra-cluster link (100GbE-class)
     peer_rtt: float = 0.5e-3
+    decompress_bw: float = DECOMPRESS_BW  # single-stream inflate rate
+    compress_bw: float = COMPRESS_BW      # single-stream deflate rate
 
     def h2d_time(self, nbytes: int) -> float:
         return nbytes / self.h2d_bw
@@ -57,25 +77,53 @@ class HardwareModel:
         return self.cloud_rtt + nbytes / self.cloud_bw
 
     # -- cluster fetch-source selection (DESIGN.md §6) ----------------------
-    def cloud_fetch_time(self, nbytes: int) -> float:
-        """Pulling a model out of the CLOUD tier into local disk."""
-        return self.cloud_time(nbytes)
+    def cloud_fetch_time(self, nbytes: int, ratio: float = 1.0,
+                         chunk_bytes: int = PIPELINE_CHUNK_BYTES) -> float:
+        """Pulling a model out of the CLOUD tier into local disk.
 
-    def peer_fetch_time(self, nbytes: int, peer_disk: bool = True) -> float:
+        With ``ratio > 1`` the blob is stored compressed: the wire leg
+        moves ``nbytes / ratio`` and a decompress stage (at
+        ``decompress_bw``) joins the chunked pipeline, so the cost is the
+        pipelined composition, not the serial sum (DESIGN.md §4).
+        """
+        if ratio <= 1.0:
+            return self.cloud_time(nbytes)
+        n = max(1, math.ceil(nbytes / max(1, chunk_bytes)))
+        return pipelined_stage_time(
+            [nbytes / ratio / self.cloud_bw, nbytes / self.decompress_bw],
+            n, lat=self.cloud_rtt)
+
+    def peer_fetch_time(self, nbytes: int, peer_disk: bool = True,
+                        ratio: float = 1.0,
+                        chunk_bytes: int = PIPELINE_CHUNK_BYTES) -> float:
         """Pulling a model from a peer node over the cluster link.
 
         The transfer streams, so the bottleneck is min(link, source) —
         when the peer copy is only on its disk the peer-side read rate
         caps the stream; a HOST/DEVICE-resident copy streams from DRAM
-        at full link rate.
+        at full link rate. With ``ratio > 1`` the peer compresses on the
+        wire: a sender-side compress stage (``compress_bw``) and a
+        receiver-side decompress stage join the pipeline while the link
+        moves ``nbytes / ratio`` — on a fast peer link the compress stage
+        is usually the max-stage, which is exactly why raw peer copies
+        often win (DESIGN.md §6).
         """
-        bw = min(self.peer_bw, self.disk_bw) if peer_disk else self.peer_bw
-        return self.peer_rtt + nbytes / bw
+        if ratio <= 1.0:
+            bw = min(self.peer_bw, self.disk_bw) if peer_disk else self.peer_bw
+            return self.peer_rtt + nbytes / bw
+        src_bw = self.disk_bw if peer_disk else self.cached_read_bw
+        n = max(1, math.ceil(nbytes / max(1, chunk_bytes)))
+        return pipelined_stage_time(
+            [nbytes / src_bw, nbytes / self.compress_bw,
+             nbytes / ratio / self.peer_bw, nbytes / self.decompress_bw],
+            n, lat=self.peer_rtt)
 
     def pick_fetch_source(self, nbytes: int, have_peer: bool,
                           have_cloud: bool, peer_disk: bool = True,
                           peer_s: float = None,
-                          cloud_s: float = None) -> tuple:
+                          cloud_s: float = None,
+                          peer_ratio: float = 1.0,
+                          cloud_ratio: float = 1.0) -> tuple:
         """Cheapest available source for a DISK-miss fetch.
 
         Returns ``(source, modeled_seconds)`` with source one of
@@ -83,14 +131,19 @@ class HardwareModel:
         available (the caller turns that into FileNotFoundError).
         ``peer_s``/``cloud_s`` override the default link models — the
         cluster passes the holding store's own constants (DESIGN.md §6).
+        ``peer_ratio``/``cloud_ratio`` make the default models
+        compression-aware (compressed-wire costs) when no override is
+        given.
         """
         options = {}
         if have_peer:
             options["peer"] = (peer_s if peer_s is not None
-                               else self.peer_fetch_time(nbytes, peer_disk))
+                               else self.peer_fetch_time(nbytes, peer_disk,
+                                                         ratio=peer_ratio))
         if have_cloud:
             options["cloud"] = (cloud_s if cloud_s is not None
-                                else self.cloud_fetch_time(nbytes))
+                                else self.cloud_fetch_time(nbytes,
+                                                           ratio=cloud_ratio))
         if not options:
             raise KeyError("no fetch source available")
         src = min(options, key=options.get)
@@ -110,42 +163,105 @@ class HardwareModel:
                 + self.h2d_time(nbytes))
 
     def staging_pipelined_time(self, nbytes: int,
-                               chunk_bytes: int = PIPELINE_CHUNK_BYTES) -> float:
+                               chunk_bytes: int = PIPELINE_CHUNK_BYTES,
+                               ratio: float = 1.0) -> float:
         """Chunked pipeline: fill the pipe once, then pay max(stage) per
         chunk — total = latency + sum(stage) + (n-1) * max(stage). Equals the
-        serial time at one chunk and is strictly below it for n >= 2."""
+        serial time at one chunk and is strictly below it for n >= 2.
+
+        ``ratio > 1`` models staging a blob that is still compressed on
+        local storage: the disk stage reads ``nbytes / ratio`` and a
+        decompress stage joins the chain — latency won for free until
+        decompression becomes the max-stage (DESIGN.md §4 crossover).
+        """
         n = max(1, math.ceil(nbytes / max(1, chunk_bytes)))
-        per = nbytes / n
-        stages = (per / self.disk_bw, per / self.cached_read_bw,
-                  per / self.h2d_bw)
-        return self.disk_lat + sum(stages) + (n - 1) * max(stages)
+        stages = [nbytes / ratio / self.disk_bw]
+        if ratio > 1.0:
+            stages.append(nbytes / self.decompress_bw)
+        stages += [nbytes / self.cached_read_bw, nbytes / self.h2d_bw]
+        return pipelined_stage_time(stages, n, lat=self.disk_lat)
+
+
+def drop_page_cache(path: str) -> bool:
+    """Best-effort page-cache eviction for ``path`` via
+    ``posix_fadvise(POSIX_FADV_DONTNEED)``; the file must be synced first
+    (dirty pages are not droppable). Returns False where the platform has
+    no fadvise or the filesystem rejects the advice — callers fall back
+    gracefully to whatever the first read then measures."""
+    if not hasattr(os, "posix_fadvise"):
+        return False
+    try:
+        fd = os.open(path, os.O_RDONLY)
+        try:
+            os.posix_fadvise(fd, 0, 0, os.POSIX_FADV_DONTNEED)
+        finally:
+            os.close(fd)
+        return True
+    except OSError:
+        return False
+
+
+def _timed_read(path: str, view: memoryview) -> float:
+    """Seconds to read the whole file into a preallocated buffer
+    (``readinto``, unbuffered — measures I/O, not the allocator)."""
+    t0 = time.perf_counter()
+    with open(path, "rb", buffering=0) as f:
+        f.readinto(view)
+    return max(time.perf_counter() - t0, 1e-9)
+
+
+def _memory_read_rate(nbytes: int, view: memoryview) -> float:
+    """Page-cache-equivalent read rate measured against tmpfs (/dev/shm).
+
+    On filesystems whose reads never hit the guest page cache (9p/NFS with
+    cache=none), re-reading a file measures the backing transport twice and
+    the buffered/cached distinction collapses; a tmpfs read IS a
+    memory-backed read, so it anchors the cached rate. Returns 0.0 where
+    /dev/shm is unavailable."""
+    shm_dir = "/dev/shm"
+    if not os.path.isdir(shm_dir) or not os.access(shm_dir, os.W_OK):
+        return 0.0
+    path = os.path.join(shm_dir, f".trims_cached_{os.getpid()}")
+    try:
+        with open(path, "wb") as f:
+            f.write(bytes(nbytes))
+        _timed_read(path, view)  # warm: fault in the tmpfs pages
+        return nbytes / _timed_read(path, view)
+    except OSError:
+        return 0.0
+    finally:
+        try:
+            os.unlink(path)
+        except OSError:
+            pass
 
 
 def measure(tmpdir: str | None = None, nbytes: int = 64 * 2 ** 20) -> HardwareModel:
-    """Measure real buffered-disk and cached-read bandwidth (paper Table 2)."""
+    """Measure real buffered-disk and cached-read bandwidth (paper Table 2).
+
+    The benchmark file is written, fsynced, and *evicted from the page
+    cache* (``drop_page_cache``) before the buffered-disk pass — without
+    the eviction the pass is served from the cache the write just filled
+    and ``disk_bw`` collapses into ``cached_read_bw``. The cached pass is
+    the warm re-read, floored by a tmpfs probe for filesystems whose reads
+    bypass the guest page cache entirely.
+    """
     hw = HardwareModel()
     d = tmpdir or tempfile.gettempdir()
     path = os.path.join(d, f".trims_bench_{os.getpid()}")
-    buf = os.urandom(nbytes)
+    dest = bytearray(nbytes)
+    view = memoryview(dest)
     try:
-        t0 = time.perf_counter()
         with open(path, "wb") as f:
-            f.write(buf)
+            f.write(os.urandom(nbytes))
             f.flush()
             os.fsync(f.fileno())
-        _ = time.perf_counter() - t0
-
-        # drop nothing (no root guarantees) -> first read ~ buffered, second ~ cached
-        t0 = time.perf_counter()
-        with open(path, "rb") as f:
-            f.read()
-        buffered = time.perf_counter() - t0
-        t0 = time.perf_counter()
-        with open(path, "rb") as f:
-            f.read()
-        cached = time.perf_counter() - t0
-        hw.disk_bw = max(50e6, nbytes / max(buffered, 1e-9))
-        hw.cached_read_bw = max(hw.disk_bw, nbytes / max(cached, 1e-9))
+        drop_page_cache(path)
+        buffered = _timed_read(path, view)   # cold: backing storage
+        cached = _timed_read(path, view)     # warm: page cache (where one exists)
+        hw.disk_bw = max(50e6, nbytes / buffered)
+        hw.cached_read_bw = max(hw.disk_bw, nbytes / cached,
+                                _memory_read_rate(nbytes, view))
     finally:
         try:
             os.unlink(path)

@@ -52,7 +52,10 @@ class OpenTimings:
     (cloud/peer links, TPU H2D); ``tier_hit`` names the resolving tier."""
     tier_hit: str = ""
     cloud_s: float = 0.0          # modeled CLOUD-tier download time
+                                  # (compression-aware: wire at stored bytes
+                                  # + overlapped decompress stage)
     peer_s: float = 0.0           # modeled peer-to-peer fetch time (cluster)
+    decompress_s: float = 0.0     # measured inflate busy s (cloud/peer fetch)
     disk_read_s: float = 0.0      # measured file -> host bytes
     deserialize_s: float = 0.0    # measured unmarshal -> arrays
     h2d_measured_s: float = 0.0   # measured jnp staging on this host
@@ -203,7 +206,8 @@ class MRM:
                  staging_chunk_bytes: int = PIPELINE_CHUNK_BYTES,
                  pipeline_depth: int = 2,
                  objectstore=None,
-                 writeback_to_cloud: bool = False):
+                 writeback_to_cloud: bool = False,
+                 cloud_codec: Optional[str] = None):
         self.disk = disk
         self.cloud = cloud
         self.objectstore = objectstore  # CLOUD tier (core.objectstore)
@@ -239,6 +243,9 @@ class MRM:
             "modeled_fetch_s": 0.0, "modeled_stage_s": 0.0,
         }
         self.writeback_to_cloud = writeback_to_cloud
+        # codec for CLOUD write-backs (None -> the object store's default);
+        # fetches always decode whatever codec the manifest records
+        self.cloud_codec = cloud_codec
         self._wb_queue = None
         if writeback_to_cloud and objectstore is not None:
             self._start_writeback()
@@ -483,8 +490,16 @@ class MRM:
         for store in (self.cloud, self.objectstore):
             if store is None or not store.contains(key):
                 continue
-            download = getattr(store, "fetch", None) or store.download
-            modeled, _ = download(key, self.disk)
+            if hasattr(store, "fetch"):  # ObjectStore: compression-aware
+                sink: list = []
+                modeled, _ = store.fetch(key, self.disk, report_out=sink)
+                report = sink[0] if sink else None
+                if report is not None:  # compressed blob: decode pipelined
+                    timings.decompress_s += report.stage("decompress").busy_s
+                    timings.stage_overlap_s += report.overlap_s()
+                    timings.chunks = max(timings.chunks, report.n_chunks)
+            else:  # legacy CloudStore
+                modeled, _ = store.download(key, self.disk)
             timings.cloud_s = modeled
             timings.tier_hit = "cloud"
             with self._lock:
@@ -512,7 +527,9 @@ class MRM:
                 # models are version-keyed and immutable: a key already in
                 # the object store needs no re-upload
                 if self.disk.contains(key) and not self.objectstore.contains(key):
-                    self.objectstore.put_file(key, self.disk.path_for(key))
+                    # codec=None means the store's own default
+                    self.objectstore.put_file(key, self.disk.path_for(key),
+                                              codec=self.cloud_codec)
                     with self._lock:
                         self.metrics["cloud_writebacks"] += 1
             except Exception:  # noqa: BLE001 — write-back is best-effort
@@ -667,8 +684,8 @@ class MRM:
         timings.disk_read_s = report.stage("disk_read").busy_s
         timings.deserialize_s = report.stage("deserialize").busy_s
         timings.h2d_measured_s = report.stage("h2d").busy_s
-        timings.chunks = report.n_chunks
-        timings.stage_overlap_s = report.overlap_s()
+        timings.chunks = max(timings.chunks, report.n_chunks)
+        timings.stage_overlap_s += report.overlap_s()  # adds to fetch overlap
         self._record_staging_models(timings, nbytes)
         self._maybe_simulate_h2d(timings)
 
@@ -712,8 +729,8 @@ class MRM:
                         depth=self.pipeline_depth)
                 timings.disk_read_s = report.stage("disk_read").busy_s
                 timings.deserialize_s = report.stage("deserialize").busy_s
-                timings.chunks = report.n_chunks
-                timings.stage_overlap_s = report.overlap_s()
+                timings.chunks = max(timings.chunks, report.n_chunks)
+                timings.stage_overlap_s += report.overlap_s()
                 hm = HostModel(arrays, nbytes, segs)
                 with self._lock:
                     self.metrics["pipelined_loads"] += 1

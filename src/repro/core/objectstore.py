@@ -3,9 +3,19 @@
 The bottom of the four-tier hierarchy ``DEVICE -> HOST -> DISK -> CLOUD``:
 a blob store addressed by content digest, the reproduction's stand-in for
 S3/GCS model repositories. Blobs live under ``blobs/<digest[:2]>/<digest>``
-and a JSON manifest maps model keys to ``{digest, nbytes}``, so two model
-versions with byte-identical weights share one blob (content dedup) and a
-``put`` of bytes the store already holds costs only a manifest update.
+and a JSON manifest maps model keys to
+``{digest, nbytes, stored_nbytes, codec}``, so two model versions with
+byte-identical weights share one blob (content dedup) and a ``put`` of
+bytes the store already holds costs only a manifest update.
+
+Blobs are optionally stored **compressed** (``codec`` — see
+``repro.core.codec``): the digest always addresses the *uncompressed*
+content (identity is stable across codecs), the blob file carries a
+``.{codec}`` suffix, and ``fetch`` decodes through a chunked pipeline
+(wire read | decompress | disk write) so decompression overlaps the
+transfer instead of serializing after it (DESIGN.md §4). The wire leg is
+charged at ``stored_nbytes`` — ratio is latency won for free until the
+decompress stage becomes the max-stage.
 
 The backend is a local directory — tests run hermetically — while the
 network is *modeled*: ``fetch``/``put_file`` return the modeled transfer
@@ -16,16 +26,23 @@ from __future__ import annotations
 
 import hashlib
 import json
+import math
 import os
 import shutil
 import tempfile
 import threading
 import time
-from typing import Dict, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.store import DiskStore, write_model
+from repro.core.codec import get_codec
+from repro.core.costmodel import (DECOMPRESS_BW, PIPELINE_CHUNK_BYTES,
+                                  pipelined_stage_time)
+from repro.core.pipeline import PipelineReport, run_pipeline
+from repro.core.store import DiskStore, atomic_dest_file, write_model
+
+_HEX = set("0123456789abcdef")
 
 
 def _key_id(key) -> str:
@@ -34,15 +51,30 @@ def _key_id(key) -> str:
 
 
 class ObjectStore:
-    """Content-addressed put/get over a local-dir backend. Thread-safe."""
+    """Content-addressed put/get over a local-dir backend. Thread-safe.
+
+    ``codec`` is the default for writes (every blob records its own codec
+    in the manifest, so reads always decode correctly — including entries
+    written before compression existed, which default to ``none``).
+    ``decompress_bw`` feeds the modeled pipelined fetch time;
+    ``chunk_bytes`` sizes the real fetch pipeline's chunks.
+    """
 
     def __init__(self, root: str, bw: float = 1e9, rtt: float = 20e-3,
-                 simulate_time: bool = False):
+                 simulate_time: bool = False, codec: str = "none",
+                 decompress_bw: float = DECOMPRESS_BW,
+                 chunk_bytes: int = PIPELINE_CHUNK_BYTES):
         self.root = root
         self.blob_dir = os.path.join(root, "blobs")
         self.manifest_path = os.path.join(root, "manifest.json")
         self.bw, self.rtt = bw, rtt
         self.simulate_time = simulate_time
+        # keep the Codec OBJECT: a tuned instance (e.g. ZlibCodec(level=9))
+        # must not be flattened to its registry default via the name
+        self._codec = get_codec(codec)
+        self.codec = self._codec.name
+        self.decompress_bw = decompress_bw
+        self.chunk_bytes = chunk_bytes
         self._lock = threading.RLock()
         os.makedirs(self.blob_dir, exist_ok=True)
         self._manifest: Dict[str, dict] = {}
@@ -53,11 +85,16 @@ class ObjectStore:
         self.puts = 0
         self.fetches = 0
         self.dedup_hits = 0
-        self.bytes_fetched = 0
+        self.bytes_fetched = 0       # logical (uncompressed) bytes delivered
+        self.wire_bytes_fetched = 0  # stored bytes that crossed the wire
+        self.gc_runs = 0
+        self.gc_blobs_removed = 0
+        self.gc_reclaimed_bytes = 0
 
     # -- internals ----------------------------------------------------------
-    def _blob_path(self, digest: str) -> str:
-        return os.path.join(self.blob_dir, digest[:2], digest)
+    def _blob_path(self, digest: str, codec: str = "none") -> str:
+        suffix = "" if codec == "none" else f".{codec}"
+        return os.path.join(self.blob_dir, digest[:2], digest + suffix)
 
     def _save_manifest_locked(self):
         tmp = self.manifest_path + ".tmp"
@@ -65,19 +102,34 @@ class ObjectStore:
             json.dump(self._manifest, f, indent=1)
         os.replace(tmp, self.manifest_path)
 
-    def _throttle(self, nbytes: int, elapsed: float) -> float:
-        modeled = self.rtt + nbytes / self.bw
+    def _throttle(self, modeled: float, elapsed: float) -> float:
         if self.simulate_time and elapsed < modeled:
             time.sleep(min(modeled - elapsed, 0.25))  # cap: keep benches fast
         return modeled
 
+    def _modeled_fetch(self, nbytes: int, stored_nbytes: int,
+                       codec: str) -> float:
+        """Modeled seconds for the CLOUD leg: wire at ``stored_nbytes``
+        over ``bw``; a compressed blob adds a decompress stage overlapped
+        by the chunked pipeline (DESIGN.md §4)."""
+        wire = stored_nbytes / self.bw
+        if codec == "none":
+            return self.rtt + wire
+        n = max(1, math.ceil(nbytes / max(1, self.chunk_bytes)))
+        return pipelined_stage_time([wire, nbytes / self.decompress_bw], n,
+                                    lat=self.rtt)
+
     # -- writes -------------------------------------------------------------
-    def put_file(self, key, path: str) -> str:
+    def put_file(self, key, path: str, codec: Optional[str] = None) -> str:
         """Upload a serialized ``.trims`` file; returns its content digest.
 
-        A blob the store already holds is not re-copied (dedup) — only the
-        manifest entry is written.
+        The digest is of the *uncompressed* content; the blob is stored
+        through ``codec`` (store default when None). A blob the store
+        already holds under that codec is not re-written (dedup) — only
+        the manifest entry is. The modeled wire leg moves the compressed
+        size.
         """
+        codec_obj = get_codec(codec) if codec is not None else self._codec
         h = hashlib.sha256()
         with open(path, "rb") as f:
             for chunk in iter(lambda: f.read(8 << 20), b""):
@@ -87,25 +139,34 @@ class ObjectStore:
         t0 = time.perf_counter()
         with self._lock:
             self.puts += 1
-            blob = self._blob_path(digest)
+            blob = self._blob_path(digest, codec_obj.name)
             if os.path.exists(blob):
                 self.dedup_hits += 1
             else:
-                os.makedirs(os.path.dirname(blob), exist_ok=True)
-                shutil.copyfile(path, blob + ".tmp")
-                os.replace(blob + ".tmp", blob)
-            self._manifest[_key_id(key)] = {"digest": digest, "nbytes": nbytes}
+                with atomic_dest_file(blob, prefix=".put-") as (fd, _):
+                    comp = codec_obj.compressor()
+                    with os.fdopen(fd, "wb") as out, open(path, "rb") as f:
+                        for chunk in iter(lambda: f.read(self.chunk_bytes),
+                                          b""):
+                            out.write(comp.compress(chunk))
+                        out.write(comp.flush())
+            stored_nbytes = os.path.getsize(blob)
+            self._manifest[_key_id(key)] = {
+                "digest": digest, "nbytes": nbytes,
+                "stored_nbytes": stored_nbytes, "codec": codec_obj.name}
             self._save_manifest_locked()
-        self._throttle(nbytes, time.perf_counter() - t0)
+        self._throttle(self.rtt + stored_nbytes / self.bw,
+                       time.perf_counter() - t0)
         return digest
 
-    def put(self, key, tensors: Dict[str, np.ndarray], meta=None) -> str:
+    def put(self, key, tensors: Dict[str, np.ndarray], meta=None,
+            codec: Optional[str] = None) -> str:
         """Serialize ``tensors`` to the .trims format and upload."""
         fd, tmp = tempfile.mkstemp(suffix=".trims", dir=self.root)
         os.close(fd)
         try:
             write_model(tmp, tensors, meta)
-            return self.put_file(key, tmp)
+            return self.put_file(key, tmp, codec=codec)
         finally:
             try:
                 os.unlink(tmp)
@@ -113,10 +174,52 @@ class ObjectStore:
                 pass
 
     def delete(self, key):
-        """Drop the manifest entry (blobs stay — other keys may share them)."""
+        """Drop the manifest entry (blobs stay — other keys may share them;
+        ``gc_blobs`` reclaims the ones nobody references anymore)."""
         with self._lock:
             if self._manifest.pop(_key_id(key), None) is not None:
                 self._save_manifest_locked()
+
+    def gc_blobs(self) -> int:
+        """Remove blobs unreferenced by any manifest entry; returns the
+        bytes reclaimed (also accumulated into ``stats()``).
+
+        ``delete`` only drops manifest entries — under version churn the
+        blob dir otherwise grows without bound. Runs under the store lock
+        (puts write blobs under the same lock, so a half-written blob can
+        never be swept); in-flight temp files are skipped by the
+        digest-name filter, and a fetch that loses its blob to a
+        concurrent delete+gc re-stats and retries rather than failing.
+        """
+        with self._lock:
+            live = {os.path.abspath(self._blob_path(
+                        e["digest"], e.get("codec", "none")))
+                    for e in self._manifest.values()}
+            reclaimed = removed = 0
+            for sub in sorted(os.listdir(self.blob_dir)):
+                d = os.path.join(self.blob_dir, sub)
+                if not os.path.isdir(d):
+                    continue
+                for fn in os.listdir(d):
+                    stem = fn.split(".", 1)[0]
+                    if len(stem) != 64 or not set(stem) <= _HEX:
+                        continue  # not a blob (e.g. a put's temp file)
+                    p = os.path.abspath(os.path.join(d, fn))
+                    if p in live:
+                        continue
+                    try:
+                        nb = os.path.getsize(p)
+                        os.unlink(p)
+                    except OSError:
+                        continue
+                    reclaimed += nb
+                    removed += 1
+                if not os.listdir(d):
+                    os.rmdir(d)
+            self.gc_runs += 1
+            self.gc_blobs_removed += removed
+            self.gc_reclaimed_bytes += reclaimed
+            return reclaimed
 
     # -- reads --------------------------------------------------------------
     def contains(self, key) -> bool:
@@ -124,10 +227,14 @@ class ObjectStore:
             return _key_id(key) in self._manifest
 
     def stat(self, key) -> Optional[dict]:
-        """``{"digest", "nbytes"}`` for ``key``, or None."""
+        """``{"digest", "nbytes", "stored_nbytes", "codec"}`` for ``key``,
+        or None. Entries written before compression existed are surfaced
+        with ``codec="none"`` and ``stored_nbytes == nbytes``."""
         with self._lock:
             e = self._manifest.get(_key_id(key))
-            return dict(e) if e is not None else None
+            if e is None:
+                return None
+            return {"stored_nbytes": e["nbytes"], "codec": "none", **e}
 
     def nbytes(self, key) -> int:
         st = self.stat(key)
@@ -135,25 +242,98 @@ class ObjectStore:
             raise KeyError(f"{key} not in object store")
         return st["nbytes"]
 
-    def fetch(self, key, dest: DiskStore) -> Tuple[float, int]:
-        """Download ``key`` into a local DiskStore.
-
-        Returns ``(modeled_seconds, nbytes)`` — the CLOUD leg of a cold
-        open's timeline.
-        """
+    def modeled_fetch_s(self, key) -> float:
+        """Modeled CLOUD-leg seconds for ``key`` at this store's link —
+        compression-aware: the wire moves ``stored_nbytes`` and the
+        decompress stage is overlapped. This is what fetch-source cost
+        compares should use (DESIGN.md §6)."""
         st = self.stat(key)
         if st is None:
             raise KeyError(f"{key} not in object store")
-        src = self._blob_path(st["digest"])
+        return self._modeled_fetch(st["nbytes"], st["stored_nbytes"],
+                                   st["codec"])
+
+    def _fetch_pipelined(self, src: str, out, codec_name: str
+                         ) -> PipelineReport:
+        """The compressed download path: wire read | decompress | disk
+        write as one chunked pipeline (decode overlaps the transfer).
+        ``out`` is the destination file object, left open."""
+        codec_obj = get_codec(codec_name)
+        decomp = codec_obj.decompressor()
+        size = os.path.getsize(src)
+        offsets = list(range(0, size, self.chunk_bytes)) or [0]
+        with open(src, "rb") as fsrc:
+
+            def wire_read(off):
+                fsrc.seek(off)
+                return fsrc.read(self.chunk_bytes)
+
+            def decompress(data):
+                return decomp.decompress(data)
+
+            def disk_write(data):
+                out.write(data)
+                return len(data)
+
+            _, report = run_pipeline(
+                offsets,
+                [("wire_read", wire_read, len),
+                 ("decompress", decompress, len),
+                 ("disk_write", disk_write)],
+                depth=2)
+        out.write(decomp.flush())
+        return report
+
+    def fetch(self, key, dest: DiskStore,
+              report_out: Optional[List] = None) -> Tuple[float, int]:
+        """Download ``key`` into a local DiskStore.
+
+        Returns ``(modeled_seconds, nbytes)`` — the CLOUD leg of a cold
+        open's timeline, with the wire charged at ``stored_nbytes`` and a
+        compressed blob's decompress stage overlapped by the chunked
+        pipeline. Concurrent fetches of one key are safe: each writes a
+        unique temp file and the last atomic replace wins. When
+        ``report_out`` is given, the fetch's :class:`PipelineReport` (or
+        None for uncompressed blobs) is appended.
+        """
         dst = dest.path_for(key)
         os.makedirs(os.path.dirname(dst), exist_ok=True)
         t0 = time.perf_counter()
-        shutil.copyfile(src, dst + ".tmp")
-        os.replace(dst + ".tmp", dst)
-        modeled = self._throttle(st["nbytes"], time.perf_counter() - t0)
+        report = None
+        # the blob is read OUTSIDE the store lock, so a concurrent
+        # delete + gc_blobs can unlink it mid-copy — on FileNotFoundError
+        # re-stat and retry: a still-referenced key's blob is never gc'd,
+        # so either the re-stat misses (plain KeyError, the key was
+        # deleted under us) or the retry reads the re-put blob
+        for attempt in (0, 1):
+            st = self.stat(key)
+            if st is None:
+                raise KeyError(f"{key} not in object store")
+            src = self._blob_path(st["digest"], st["codec"])
+            try:
+                with atomic_dest_file(dst, prefix=".fetch-") as (fd, tmp):
+                    if st["codec"] == "none":
+                        os.close(fd)
+                        shutil.copyfile(src, tmp)
+                    else:
+                        with os.fdopen(fd, "wb") as out:
+                            report = self._fetch_pipelined(src, out,
+                                                           st["codec"])
+                break
+            except FileNotFoundError:
+                if attempt == 0:
+                    continue
+                raise
+        modeled = self._throttle(
+            self._modeled_fetch(st["nbytes"], st["stored_nbytes"],
+                                st["codec"]),
+            time.perf_counter() - t0)
         with self._lock:
             self.fetches += 1
             self.bytes_fetched += st["nbytes"]
+            self.wire_bytes_fetched += st["stored_nbytes"]
+        if report_out is not None:
+            report_out.append(report)
         return modeled, st["nbytes"]
 
     def keys(self):
@@ -167,8 +347,16 @@ class ObjectStore:
 
     def stats(self) -> dict:
         with self._lock:
-            blobs = {e["digest"] for e in self._manifest.values()}
+            blobs = {(e["digest"], e.get("codec", "none"))
+                     for e in self._manifest.values()}
+            stored = sum(e.get("stored_nbytes", e["nbytes"])
+                         for e in self._manifest.values())
             return {"keys": len(self._manifest), "blobs": len(blobs),
                     "puts": self.puts, "dedup_hits": self.dedup_hits,
                     "fetches": self.fetches,
-                    "bytes_fetched": self.bytes_fetched}
+                    "bytes_fetched": self.bytes_fetched,
+                    "wire_bytes_fetched": self.wire_bytes_fetched,
+                    "stored_bytes": stored,
+                    "gc_runs": self.gc_runs,
+                    "gc_blobs_removed": self.gc_blobs_removed,
+                    "gc_reclaimed_bytes": self.gc_reclaimed_bytes}

@@ -11,7 +11,10 @@ multi-tier staging needs to hide I/O behind PCIe transfers.
 
 The runner is deliberately generic (items in, per-stage callables, stats
 out) so the MRM uses one mechanism for disk->host, host->device, and the
-full three-stage cold path.
+full three-stage cold path — and the compressed-transfer paths
+(ObjectStore fetch, peer wire) use the same runner with a **decompress**
+stage in the chain, so decode overlaps the transfer instead of
+serializing after it (DESIGN.md §4).
 """
 from __future__ import annotations
 
@@ -29,6 +32,7 @@ class StageStats:
     name: str
     busy_s: float = 0.0
     items: int = 0
+    bytes: int = 0  # only counted for stages declared with a sizer
 
 
 @dataclass
@@ -73,19 +77,25 @@ def plan_chunks(sized_items: Sequence[Tuple[object, int]],
 
 
 def run_pipeline(items: Sequence[object],
-                 stages: Sequence[Tuple[str, Callable]],
+                 stages: Sequence[Tuple],
                  depth: int = 2) -> Tuple[List[object], PipelineReport]:
     """Run every item through ``stages`` with bounded inter-stage queues.
 
-    Each stage is ``(name, fn)`` where ``fn(item) -> item`` for the next
-    stage. All stages execute concurrently (one thread each); queues of
-    ``depth`` bound the number of chunks in flight, so peak extra memory is
+    Each stage is ``(name, fn)`` — or ``(name, fn, sizer)`` where
+    ``sizer(result) -> int`` accumulates per-stage byte counts into
+    ``StageStats.bytes`` (transfer pipelines use ``len`` to report wire vs
+    decompressed bytes). ``fn(item) -> item`` feeds the next stage. All
+    stages execute concurrently (one thread each); queues of ``depth``
+    bound the number of chunks in flight, so peak extra memory is
     ``depth * chunk_bytes`` per stage boundary. The first exception aborts
     the pipeline and is re-raised in the caller.
 
     Returns (outputs of the last stage in order, PipelineReport).
     """
-    report = PipelineReport(stages=[StageStats(n) for n, _ in stages],
+    names = [s[0] for s in stages]
+    fns = [s[1] for s in stages]
+    sizers = [s[2] if len(s) > 2 else None for s in stages]
+    report = PipelineReport(stages=[StageStats(n) for n in names],
                             n_chunks=len(items))
     if not items:
         return [], report
@@ -95,6 +105,7 @@ def run_pipeline(items: Sequence[object],
     errors: List[BaseException] = []
 
     def worker(idx: int, fn: Callable, inq: "queue.Queue", outq: "queue.Queue"):
+        sizer = sizers[idx]
         while True:
             item = inq.get()
             if item is _STOP:
@@ -111,13 +122,15 @@ def run_pipeline(items: Sequence[object],
             st = report.stages[idx]
             st.busy_s += time.perf_counter() - t0
             st.items += 1
+            if sizer is not None:
+                st.bytes += sizer(res)
             outq.put(res)
 
     threads = []
-    for i, (_, fn) in enumerate(stages):
+    for i, fn in enumerate(fns):
         outq = queues[i + 1] if i + 1 < len(stages) else out_q
         t = threading.Thread(target=worker, args=(i, fn, queues[i], outq),
-                             daemon=True, name=f"stage-{stages[i][0]}")
+                             daemon=True, name=f"stage-{names[i]}")
         t.start()
         threads.append(t)
 

@@ -19,8 +19,10 @@ from __future__ import annotations
 import io
 import json
 import os
+import tempfile
 import time
 import zlib
+from contextlib import contextmanager
 from dataclasses import dataclass
 from typing import Dict, Iterable, List, Optional, Tuple
 
@@ -28,6 +30,26 @@ import numpy as np
 
 MAGIC = b"TRIMS001"
 ALIGN = 64
+
+
+@contextmanager
+def atomic_dest_file(dst: str, prefix: str = ".tmp-"):
+    """Atomic-write idiom shared by every transfer path: a UNIQUE temp
+    file in ``dst``'s directory (concurrent writers of one destination
+    must not share a staging name), renamed onto ``dst`` on clean exit,
+    unlinked on error. Yields ``(fd, tmp_path)``; the caller owns the fd
+    and must close it before the context exits."""
+    os.makedirs(os.path.dirname(dst), exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(dst), prefix=prefix)
+    try:
+        yield fd, tmp
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
+    os.replace(tmp, dst)
 
 
 @dataclass(frozen=True)
@@ -196,20 +218,24 @@ class CloudStore:
         return self.store.put(key, tensors, meta)
 
     def download(self, key, dest: DiskStore) -> Tuple[float, int]:
-        """Copy key into ``dest``; returns (modeled_seconds, nbytes)."""
+        """Copy key into ``dest``; returns (modeled_seconds, nbytes).
+
+        Concurrent downloads of one key are safe: each writes a unique
+        temp file (the shared ``dst + ".tmp"`` name would let one racer
+        unlink the other's staging file out from under its replace)."""
         src = self.store.path_for(key)
         dst = dest.path_for(key)
         os.makedirs(os.path.dirname(dst), exist_ok=True)
         nbytes = os.path.getsize(src)
         modeled = self.rtt + nbytes / self.bw
         t0 = time.perf_counter()
-        with open(src, "rb") as fs, open(dst + ".tmp", "wb") as fd:
-            while True:
-                chunk = fs.read(8 << 20)
-                if not chunk:
-                    break
-                fd.write(chunk)
-        os.replace(dst + ".tmp", dst)
+        with atomic_dest_file(dst, prefix=".dl-") as (fd, _):
+            with open(src, "rb") as fs, os.fdopen(fd, "wb") as fdst:
+                while True:
+                    chunk = fs.read(8 << 20)
+                    if not chunk:
+                        break
+                    fdst.write(chunk)
         elapsed = time.perf_counter() - t0
         if self.simulate_time and elapsed < modeled:
             time.sleep(min(modeled - elapsed, 0.25))  # cap: keep benches fast
