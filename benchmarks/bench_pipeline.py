@@ -53,19 +53,22 @@ def run_pipeline_ablation(env: BenchEnv, verbose=True):
     return rows
 
 
-def run_demotion_ablation(env: BenchEnv, n_rounds: int = 4, verbose=True):
+def run_demotion_ablation(env: BenchEnv, n_rounds: int = 4, verbose=True,
+                          policy: str = "lru"):
     """Three similar-size models, device AND host tiers each fit two.
 
     Rotating A,B,C forces host evictions of models still device-resident;
     when that device copy is later evicted, demotion re-homes it in HOST
-    (next open = host hit) while drop-on-evict pays a full disk reload."""
+    (next open = host hit) while drop-on-evict pays a full disk reload.
+    ``policy`` selects the eviction policy — bench_slo's parity check runs
+    this non-oversubscribed rotation under lru AND slo."""
     names = ["ResNet50", "ResNet50-v2", "ResNeXt50"]
     size = max(env.specs[n].mwmf_bytes for n in names)
     rows = []
     for demote in (False, True):
         mrm = MRM(env.disk, device_capacity=int(size * 2.5),
                   host_capacity=int(size * 2.5), hw=env.hw,
-                  demote_on_evict=demote)
+                  demote_on_evict=demote, policy=policy)
         tier_hits = []
         for _ in range(n_rounds):
             for name in names:
@@ -73,7 +76,8 @@ def run_demotion_ablation(env: BenchEnv, n_rounds: int = 4, verbose=True):
                 tier_hits.append(h.timings.tier_hit)
                 mrm.close(h)
         stats = mrm.stats()
-        rows.append({"demote_on_evict": demote, "tier_hits": tier_hits,
+        rows.append({"demote_on_evict": demote, "policy": policy,
+                     "tier_hits": tier_hits,
                      "disk_loads": stats["disk_loads"],
                      "demotions": stats["demotions"]})
         if verbose:

@@ -1,0 +1,276 @@
+"""Paper Fig. 11 at cluster scale: eviction policy x routing policy under
+oversubscription, scored on p99 latency and SLO violation rate.
+
+A 3-node cluster serves a skewed request stream over a model zoo whose
+total bytes far exceed any node's device tier (the paper's oversubscribed
+regime). Each cell of the sweep picks one eviction policy (lru / lcu /
+slo) and one routing policy (round_robin / affinity); every request
+carries a deadline, and the cell is scored on the *modeled* per-request
+latency distribution (p50/p99) and the fraction of requests that blow
+their deadline.
+
+What the ``slo`` policy (DESIGN.md §7) changes: victims are ordered by
+expected reload cost x probability-of-reuse-before-deadline, so the
+expensive-to-reload large models and the hot short-gap models keep their
+device slots, and the eviction tax lands on small/cold entries whose
+reload fits inside the deadline. Recency policies spread the tax by
+recency alone, so the steady-state tail contains big-model reloads —
+exactly the requests that violate.
+
+The arrival process runs on a *virtual clock* advanced by each request's
+modeled latency (``NextUsePredictor.clock`` is injectable), so the sweep
+is deterministic on any host. The non-oversubscribed sanity check
+(``slo`` must match LRU when capacity is ample — no regression on
+bench_pipeline's rotation) rides along as ``--parity``.
+"""
+from __future__ import annotations
+
+import os
+import random
+import shutil
+import tempfile
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from benchmarks.common import DISPATCH_FLOOR_S, write_csv
+from repro.core import (Cluster, DiskStore, FaaSPlatform, HardwareModel,
+                        MRM, ModelKey, ObjectStore, Router)
+from repro.core.proxyzoo import populate_store, small_specs
+
+# The workload is the paper's Fig. 11 shape pushed to cluster scale: a
+# Zipf-skewed interactive stream over a HOT set (big and small models
+# interleaved, so popularity and reload cost are not aligned) with a
+# periodic SWEEP of colder models riding over it — the batch/cron-style
+# registry scan that is the classic recency-eviction killer. A recency
+# policy lets every sweep flush the hot set (each hot model then pays a
+# full reload against its deadline); the cost/SLO-aware policy holds the
+# hot set because sweep keys predict long gaps until their next use.
+HOT_MODELS = ["VGG19", "ResNet50", "VGG16", "Inception-v3", "ResNet269-v2",
+              "ResNet18-v2", "ResNet152-11k", "NIN"]
+SWEEP_MODELS = ["AlexNet", "ResNet152", "Inception-ResNet-v2", "ResNet101",
+                "Inception-v4", "DPN92", "ResNeXt50", "Xception",
+                "ResNet34-v2", "ResNeXt26-32x4d", "DPN68", "GoogLeNet"]
+MODELS = HOT_MODELS + SWEEP_MODELS
+N_NODES = 3
+SWEEP_EVERY = 30       # hot requests between registry sweeps
+DEVICE_FRAC = 0.22     # per-node device tier as a fraction of total bytes:
+                       # big enough that one node's HOT share fits (the
+                       # policy has a right answer to find), small enough
+                       # that total >> any device tier (~4.5x)
+HOST_FRAC = 0.32       # per-node host tier — also oversubscribed: with
+                       # affinity routing a node's share is ~1/3 of total
+DEADLINE_S = 0.2       # per-request SLO: warm tiers meet it, big reloads blow it
+# skewed popularity inside the hot set: rank r weight 1/(r+1)^1.1
+ZIPF_S = 1.1
+EVICTIONS = ("lru", "lcu", "slo")
+ROUTINGS = ("round_robin", "affinity")
+
+
+def make_objectstore(root: str, scale: float):
+    specs = [s for s in small_specs(scale) if s.name in MODELS]
+    assert len(specs) == len(MODELS), "model rotation missing from the zoo"
+    pub = DiskStore(os.path.join(root, "publish"))
+    keys = populate_store(pub, specs)
+    obj = ObjectStore(os.path.join(root, "cloud"))
+    for key in keys.values():
+        obj.put_file(key, pub.path_for(key))
+    shutil.rmtree(pub.root, ignore_errors=True)
+    total = sum(s.mwmf_bytes for s in specs)
+    return obj, [keys[n] for n in MODELS], total
+
+
+def gen_trace(rng: random.Random, n_requests: int, keys) -> List:
+    """Zipf hot stream + a full sweep of the cold tail every SWEEP_EVERY
+    hot requests (shuffled per sweep so no node-affinity accident hides
+    the scan)."""
+    hot = keys[:len(HOT_MODELS)]
+    sweep = keys[len(HOT_MODELS):]
+    weights = [1.0 / (r + 1) ** ZIPF_S for r in range(len(hot))]
+    out: List = []
+    while len(out) < n_requests:
+        out.extend(rng.choices(hot, weights=weights, k=SWEEP_EVERY))
+        burst = list(sweep)
+        rng.shuffle(burst)
+        out.extend(burst)
+    return out[:n_requests]
+
+
+def modeled_request_s(timings, upscale: float) -> float:
+    """Per-request modeled latency from one open's timings: the dispatch
+    floor plus the promotion chain actually paid, extrapolated from proxy
+    bytes to full model sizes (byte-proportional terms only)."""
+    t = timings
+    if t.tier_hit in ("device", "hit", ""):
+        lat = t.share_overhead_s
+    elif t.tier_hit == "host":
+        lat = (t.h2d_modeled_s + t.demote_s) * upscale
+    else:  # disk / peer / cloud: fetch legs + the pipelined cold chain
+        lat = (t.cloud_s + t.peer_s + t.staging_pipelined_modeled_s
+               + t.demote_s) * upscale
+    return DISPATCH_FLOOR_S + lat
+
+
+def run_cell(root: str, obj: ObjectStore, keys, total_bytes: int,
+             eviction: str, routing: str, trace, warmup: int,
+             scale: float, verbose: bool = True) -> Dict:
+    """One sweep cell: build the cluster, replay the trace, score it."""
+    hw = HardwareModel()  # datasheet constants: deterministic across hosts
+    upscale = 1.0 / scale
+    cdir = os.path.join(root, f"{eviction}-{routing}")
+    cluster = Cluster(objectstore=obj)
+    vclock = [0.0]
+    platforms = []
+    for i in range(N_NODES):
+        mrm = MRM(DiskStore(os.path.join(cdir, f"disk{i}")),
+                  device_capacity=max(1 << 20, int(total_bytes * DEVICE_FRAC)),
+                  host_capacity=max(1 << 21, int(total_bytes * HOST_FRAC)),
+                  policy=eviction, hw=hw)
+        if mrm.slo is not None:
+            # arrivals on the modeled timeline, not host wall time
+            mrm.slo.predictor.clock = lambda: vclock[0]
+        node = cluster.add_node(f"node{i}", mrm)
+        p = FaaSPlatform(mrm, name=f"node{i}", cluster_node=node)
+        p.deploy("predict", _predict, prewarm=False)
+        platforms.append(p)
+    router = Router(platforms, policy=routing)
+
+    lats: List[float] = []
+    violations = 0
+    for i, key in enumerate(trace):
+        # route with the deadline (slack tie-break), then invoke WITHOUT a
+        # prefetch hint: a coalesced open would hide its own staging cost
+        # and double-record the arrival
+        node = router.route("predict", [key], deadline_s=DEADLINE_S)
+        lat = node.invoke("predict", (key, upscale), deadline_s=DEADLINE_S)
+        vclock[0] += lat
+        if i >= warmup:
+            lats.append(lat)
+            violations += lat > DEADLINE_S
+    arr = np.asarray(lats)
+    mrm_stats = [p.mrm.stats() for p in platforms]
+    acct = [c.acct for p in platforms for c in p.containers.values()]
+    row = {
+        "eviction": eviction, "routing": routing,
+        "requests": len(trace), "scored": len(lats),
+        "p50_s": float(np.percentile(arr, 50)),
+        "p99_s": float(np.percentile(arr, 99)),
+        "mean_s": float(arr.mean()),
+        "violation_rate": violations / max(1, len(lats)),
+        "deadline_s": DEADLINE_S,
+        "disk_loads": sum(s["disk_loads"] for s in mrm_stats),
+        "cloud_fetches": sum(s["cloud_downloads"] for s in mrm_stats),
+        "peer_fetches": sum(s["peer_fetches"] for s in mrm_stats),
+        "demotions": sum(s["demotions"] for s in mrm_stats),
+        "demotion_saved_reloads": sum(s["demotion_saved_reloads"]
+                                      for s in mrm_stats),
+        "mispredicted_evictions": sum(s["mispredicted_evictions"]
+                                      for s in mrm_stats),
+        "slo_stall_s": sum(s["slo_stall_s"] for s in mrm_stats),
+        # container-level accounting (measured wall deadlines are not the
+        # scored quantity, but the plumbing must agree on request counts)
+        "slo_invocations": sum(a.slo_invocations for a in acct),
+    }
+    for p in platforms:
+        p.mrm.shutdown()
+    shutil.rmtree(cdir, ignore_errors=True)
+    if verbose:
+        print(f"  {eviction:<4} x {routing:<12} p50={row['p50_s']*1e3:7.1f}ms "
+              f"p99={row['p99_s']*1e3:8.1f}ms viol={row['violation_rate']:6.1%} "
+              f"disk x{row['disk_loads']:<3d} mispred x"
+              f"{row['mispredicted_evictions']}")
+    return row
+
+
+def _predict(ctx, payload):
+    """Deployed function: open/close the model, return modeled latency."""
+    key, upscale = payload
+    m = ctx.load_model(key.framework, key.name, key.version)
+    lat = modeled_request_s(m.timings, upscale)
+    ctx.unload_model(m)
+    return lat
+
+
+def run_parity(scale: float, verbose: bool = True) -> List[Dict]:
+    """Non-oversubscribed sanity: on bench_pipeline's demotion rotation
+    (capacity for 2.5 of 3 equal-size models — recency is the right
+    signal) the slo policy must match LRU's disk loads within noise."""
+    from benchmarks.common import BenchEnv
+    from benchmarks import bench_pipeline
+    env = BenchEnv(scale=scale)
+    rows = []
+    try:
+        for policy in ("lru", "slo"):
+            r = bench_pipeline.run_demotion_ablation(env, verbose=False,
+                                                     policy=policy)
+            loads = next(x["disk_loads"] for x in r if x["demote_on_evict"])
+            rows.append({"ablation": "parity", "policy": policy,
+                         "disk_loads": loads})
+            if verbose:
+                print(f"  parity rotation: {policy:<4} disk_loads={loads}")
+    finally:
+        env.cleanup()
+    lru = next(r["disk_loads"] for r in rows if r["policy"] == "lru")
+    slo = next(r["disk_loads"] for r in rows if r["policy"] == "slo")
+    assert slo <= lru + 1, \
+        f"slo must not regress the non-oversubscribed rotation ({slo} vs {lru})"
+    return rows
+
+
+def run(scale: Optional[float] = None, n_requests: Optional[int] = None,
+        smoke: bool = False, parity: bool = True, seed: int = 7,
+        verbose: bool = True):
+    scale = scale if scale is not None else \
+        float(os.environ.get("TRIMS_BENCH_SCALE", "0.03"))
+    n_requests = n_requests or (400 if smoke else 1200)
+    warmup = n_requests // 4  # steady state: first touches are unavoidable
+    root = tempfile.mkdtemp(prefix="trims_slo_")
+    rows = []
+    try:
+        obj, keys, total_bytes = make_objectstore(root, scale)
+        if verbose:
+            dev = total_bytes * DEVICE_FRAC / 2 ** 20
+            print(f"-- Fig 11 @ cluster scale: {N_NODES} nodes x "
+                  f"{len(keys)} models, total={total_bytes / 2 ** 20:.0f}MB "
+                  f">> device={dev:.0f}MB/node; {n_requests} requests, "
+                  f"deadline={DEADLINE_S * 1e3:.0f}ms --")
+        rng = random.Random(seed)
+        trace = gen_trace(rng, n_requests, keys)
+        for routing in ROUTINGS:
+            for eviction in EVICTIONS:
+                rows.append(run_cell(root, obj, keys, total_bytes, eviction,
+                                     routing, trace, warmup, scale, verbose))
+        cell = {(r["eviction"], r["routing"]): r for r in rows}
+        slo, lru = cell[("slo", "affinity")], cell[("lru", "affinity")]
+        assert slo["p99_s"] < lru["p99_s"], \
+            f"slo p99 {slo['p99_s']:.3f}s must beat lru {lru['p99_s']:.3f}s"
+        assert slo["violation_rate"] < lru["violation_rate"], \
+            (f"slo violation rate {slo['violation_rate']:.2%} must beat "
+             f"lru {lru['violation_rate']:.2%}")
+        if verbose:
+            print(f"  => slo/affinity: p99 {lru['p99_s'] / slo['p99_s']:.1f}x "
+                  f"lower, violations {lru['violation_rate']:.1%} -> "
+                  f"{slo['violation_rate']:.1%}")
+        if parity:
+            if verbose:
+                print("-- non-oversubscribed parity (bench_pipeline rotation) --")
+            rows += run_parity(scale, verbose)
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+    write_csv("slo_sweep", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=None)
+    ap.add_argument("--requests", type=int, default=None)
+    ap.add_argument("--smoke", action="store_true",
+                    help="short trace for the ci.sh --fast gate")
+    ap.add_argument("--no-parity", dest="parity", action="store_false",
+                    default=True)
+    ap.add_argument("--seed", type=int, default=7)
+    args = ap.parse_args()
+    run(scale=args.scale, n_requests=args.requests, smoke=args.smoke,
+        parity=args.parity, seed=args.seed)

@@ -83,6 +83,18 @@ def main() -> None:
                 f"peer_speedup={by_cfg['cloud-only']['modeled_fetch_s'] / by_cfg['warm-peer']['modeled_fetch_s']:.1f}x;"
                 f"affinity_speedup={by_cfg['round_robin']['modeled_total_s'] / by_cfg['affinity']['modeled_total_s']:.1f}x"))
 
+    print("== SLO: eviction x routing under oversubscription ==", flush=True)
+    from benchmarks import bench_slo
+    rows_slo = bench_slo.run(smoke=not args.full, verbose=True)
+    by_slo = {(r["eviction"], r["routing"]): r for r in rows_slo
+              if "eviction" in r}
+    s_cell, l_cell = by_slo[("slo", "affinity")], by_slo[("lru", "affinity")]
+    out.append(("slo_sweep", 1e6 * s_cell["p99_s"],
+                f"p99_vs_lru={l_cell['p99_s'] / s_cell['p99_s']:.1f}x;"
+                f"viol={l_cell['violation_rate']:.1%}->"
+                f"{s_cell['violation_rate']:.1%};"
+                f"mispred={s_cell['mispredicted_evictions']}"))
+
     print("== compression: codec x ratio x link bw ==", flush=True)
     from benchmarks import bench_compression
     rows_z = bench_compression.run(smoke=not args.full, verbose=True)

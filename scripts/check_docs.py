@@ -29,10 +29,15 @@ REQUIRED_CONTENT = [
     ("DESIGN.md", "Cloud tier & cluster sharing"),
     ("DESIGN.md", "decompress"),
     ("DESIGN.md", "Compressed transfer"),
+    ("DESIGN.md", "SLO-aware eviction"),
     (os.path.join("docs", "API.md"), "ClusterDirectory"),
     (os.path.join("docs", "API.md"), "ObjectStore"),
     (os.path.join("docs", "API.md"), "gc_blobs"),
     (os.path.join("docs", "API.md"), "codec"),
+    (os.path.join("docs", "API.md"), "CostAware"),
+    (os.path.join("docs", "API.md"), "NextUsePredictor"),
+    (os.path.join("docs", "API.md"), "deadline_s"),
+    (os.path.join("docs", "API.md"), "LatencyStats"),
 ]
 
 LINK_RE = re.compile(r"(?<!\!)\[[^\]]+\]\(([^)\s]+)\)")

@@ -21,5 +21,9 @@ if [[ "${1:-}" == "--fast" ]]; then
     # keep the compression ablation importable + its invariants green
     # (modeled crossover, decompress-stage overlap) without the full sweep
     python -m benchmarks.bench_compression --smoke
+    # SLO-aware eviction sweep (short trace): slo must beat LRU on p99 and
+    # violation rate in the oversubscribed cells, and match LRU on the
+    # non-oversubscribed parity rotation (asserted inside the benchmark)
+    python -m benchmarks.bench_slo --smoke
 fi
 exec python -m pytest "${ARGS[@]}" "$@"

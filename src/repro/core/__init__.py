@@ -5,8 +5,8 @@ cost model, cross-process shm IPC, FaaS isolation layer, cluster-wide
 sharing (directory + peer fetch), CLOUD object store, proxy zoo.
 """
 from repro.core.cache import (  # noqa: F401
-    CacheEntry, CapacityError, EvictionPolicy, FIFO, LCU, LRU, Largest,
-    POLICIES, Tier, TierCache, TierHierarchy,
+    CacheEntry, CapacityError, CostAware, EvictionPolicy, FIFO, LCU, LRU,
+    Largest, POLICIES, Tier, TierCache, TierHierarchy, make_policy,
 )
 from repro.core.client import (  # noqa: F401
     LoadedModel, TrimsClient, cold_load, free_model, load_model,
@@ -25,4 +25,7 @@ from repro.core.pipeline import (  # noqa: F401
     PipelineReport, plan_chunks, run_pipeline,
 )
 from repro.core.sharing import get_constants, plan_granularity, rho  # noqa: F401
+from repro.core.slo import (  # noqa: F401
+    NextUsePredictor, ReloadCostEstimator, SLOState,
+)
 from repro.core.store import CloudStore, DiskStore, ModelFile, write_model  # noqa: F401

@@ -7,6 +7,7 @@ Invariants (property-tested):
 """
 from __future__ import annotations
 
+import math
 import threading
 import time
 from abc import ABC, abstractmethod
@@ -83,7 +84,75 @@ class Largest(EvictionPolicy):
         return sorted(entries, key=lambda e: -e.nbytes)
 
 
+class CostAware(EvictionPolicy):
+    """SLO/cost-aware eviction (DESIGN.md §7, Torpor/FaaSwap direction).
+
+    Scores every candidate by ``expected reload cost x probability of
+    reuse within the deadline horizon``, normalized per byte freed
+    (GreedyDual-Size/Landlord family): eviction buys capacity, so victims
+    are ordered by how little deadline-relevant reload cost each freed
+    byte gives up. Without the normalization a hot small model is always
+    a "cheap" victim in absolute seconds and gets churned endlessly to
+    admit cold giants. Ties fall back to LRU order, so with no arrival
+    signal (uniform gaps, uniform per-byte costs) the policy degrades to
+    LRU instead of thrashing.
+
+    ``predictor`` is a :class:`repro.core.slo.NextUsePredictor` (a default
+    one is built when omitted — standalone TierCaches then score from
+    entry recency alone); ``cost_fn(entry) -> seconds`` prices the reload
+    (the MRM wires a :class:`repro.core.slo.ReloadCostEstimator`; the
+    fallback uses entry bytes as a byte-proportional proxy);
+    ``horizon_fn() -> seconds`` supplies the live deadline horizon.
+    ``cost_fn`` runs under the evicting cache's lock and must only take
+    locks *below* it in the DEVICE -> HOST -> leaf order.
+    """
+    name = "slo"
+
+    def __init__(self, predictor=None, cost_fn=None, horizon_fn=None):
+        if predictor is None:
+            from repro.core.slo import NextUsePredictor
+            predictor = NextUsePredictor()
+        self.predictor = predictor
+        self.cost_fn = cost_fn
+        self.horizon_fn = horizon_fn
+
+    def _horizon_s(self) -> float:
+        if self.horizon_fn is not None:
+            return self.horizon_fn()
+        from repro.core.slo import DEFAULT_HORIZON_S
+        return DEFAULT_HORIZON_S
+
+    def score(self, e: CacheEntry, now: float = None) -> float:
+        """Expected deadline-relevant reload seconds lost *per byte freed*
+        by evicting ``e`` now — the policy's victims-first sort key."""
+        now = self.predictor.clock() if now is None else now
+        horizon = self._horizon_s()
+        p = self.predictor.reuse_probability(e.key, horizon, now=now)
+        if p is None:
+            # no arrival stream recorded (standalone cache): idle time as
+            # the gap estimate — staler entries look less likely to return
+            gap = max(now - e.last_used, self.predictor.default_gap_s)
+            p = 1.0 - math.exp(-horizon / gap)
+        cost = self.cost_fn(e) if self.cost_fn is not None else float(e.nbytes)
+        return cost * p / max(1, e.nbytes)
+
+    def order(self, entries):
+        now = self.predictor.clock()
+        return sorted(entries, key=lambda e: (self.score(e, now), e.last_used))
+
+
 POLICIES = {p.name: p for p in (LRU(), LCU(), FIFO(), Largest())}
+
+
+def make_policy(policy: "EvictionPolicy | str") -> EvictionPolicy:
+    """Resolve a policy name to an instance. Stateless policies share the
+    module singletons; ``"slo"`` constructs a fresh :class:`CostAware`
+    (it carries a per-cache predictor unless the caller wires its own)."""
+    if isinstance(policy, EvictionPolicy):
+        return policy
+    if policy == CostAware.name:
+        return CostAware()
+    return POLICIES[policy]
 
 
 class CapacityError(RuntimeError):
@@ -97,7 +166,7 @@ class TierCache:
                  policy: EvictionPolicy | str = "lru"):
         self.tier = tier
         self.capacity = int(capacity_bytes)
-        self.policy = POLICIES[policy] if isinstance(policy, str) else policy
+        self.policy = make_policy(policy)
         self.entries: Dict[Hashable, CacheEntry] = {}
         self.used = 0
         self.lock = threading.RLock()

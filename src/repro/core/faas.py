@@ -17,6 +17,9 @@ resolve disk-cold models from peers or the CLOUD object store.
 from __future__ import annotations
 
 import itertools
+import math
+import os
+import random
 import threading
 import time
 from dataclasses import dataclass, field
@@ -31,6 +34,63 @@ class IsolationError(PermissionError):
     pass
 
 
+class LatencyStats:
+    """Bounded per-invoke latency accounting: streaming count/sum/min/max
+    plus a fixed-size uniform reservoir for quantiles.
+
+    Replaces the old unbounded ``List[float]`` (one float per invocation
+    forever — a leak under sustained traffic). The first ``reservoir_size``
+    samples are stored in arrival order, so early-request indexing
+    (``latencies[0]`` cold vs ``latencies[1]`` warm) keeps working; beyond
+    that, reservoir sampling keeps a uniform sample of the whole stream.
+    Not internally locked — callers mutate under the container lock.
+    """
+
+    __slots__ = ("count", "total_s", "min_s", "max_s", "_sample", "_k", "_rng")
+
+    def __init__(self, reservoir_size: int = 1024, seed: int = 0):
+        self.count = 0
+        self.total_s = 0.0
+        self.min_s = math.inf
+        self.max_s = 0.0
+        self._sample: List[float] = []
+        self._k = reservoir_size
+        self._rng = random.Random(seed)
+
+    def append(self, dt: float) -> None:
+        self.count += 1
+        self.total_s += dt
+        self.min_s = min(self.min_s, dt)
+        self.max_s = max(self.max_s, dt)
+        if len(self._sample) < self._k:
+            self._sample.append(dt)
+        else:  # reservoir: element i survives with probability k/i
+            j = self._rng.randrange(self.count)
+            if j < self._k:
+                self._sample[j] = dt
+
+    record = append  # preferred name; append keeps list-API compatibility
+
+    def mean(self) -> float:
+        return self.total_s / self.count if self.count else 0.0
+
+    def quantile(self, q: float) -> float:
+        """Empirical quantile (0..1) over the reservoir sample."""
+        if not self._sample:
+            return 0.0
+        s = sorted(self._sample)
+        return s[min(len(s) - 1, max(0, int(math.ceil(q * len(s))) - 1))]
+
+    def __len__(self) -> int:
+        return len(self._sample)
+
+    def __getitem__(self, i):
+        return self._sample[i]
+
+    def __iter__(self):
+        return iter(self._sample)
+
+
 @dataclass
 class Accounting:
     invocations: int = 0
@@ -39,7 +99,12 @@ class Accounting:
     compute_s: float = 0.0
     bytes_loaded: int = 0
     cold_starts: int = 0
-    latencies: List[float] = field(default_factory=list)
+    latencies: LatencyStats = field(default_factory=LatencyStats)
+    # SLO accounting: invocations that carried a deadline, how many blew
+    # it, and the summed signed slack (deadline - latency; negative=late)
+    slo_invocations: int = 0
+    slo_violations: int = 0
+    slo_slack_s: float = 0.0
 
 
 class Container:
@@ -192,18 +257,33 @@ class FaaSPlatform:
         if c is not None:
             c.teardown()
 
-    def invoke(self, name: str, payload: Any = None) -> Any:
+    def invoke(self, name: str, payload: Any = None,
+               deadline_s: Optional[float] = None) -> Any:
+        """Run one request. ``deadline_s`` is the request's SLO budget:
+        it seeds the MRM's eviction-policy horizon before the function
+        runs (DESIGN.md §7) and is scored against the measured latency
+        afterwards (per-container violation accounting)."""
         with self._lock:
             spec = self.functions.get(name)
             c = self.containers.get(name)
         if spec is None or c is None:
             raise KeyError(f"function {name!r} not deployed")
+        if deadline_s is not None and self.mrm is not None:
+            self.mrm.note_deadline(deadline_s)
         t0 = time.perf_counter()
         out = spec.fn(c, payload)
         dt = time.perf_counter() - t0
-        c.acct.invocations += 1
-        c.acct.total_s += dt
-        c.acct.latencies.append(dt)
+        # accounting mutates under the container lock: concurrent invokes
+        # of one function must not lose updates (read-modify-write races)
+        with c._lock:
+            c.acct.invocations += 1
+            c.acct.total_s += dt
+            c.acct.latencies.append(dt)
+            if deadline_s is not None:
+                c.acct.slo_invocations += 1
+                c.acct.slo_slack_s += deadline_s - dt
+                if dt > deadline_s:
+                    c.acct.slo_violations += 1
         return out
 
     def invoke_pipeline(self, names: Sequence[str], payload: Any = None) -> Any:
@@ -235,6 +315,52 @@ class FaaSPlatform:
             return Tier.HOST.warmth
         return Tier.DISK.warmth if self.mrm.disk.contains(key) else 0
 
+    def _model_nbytes(self, key: ModelKey) -> int:
+        """Best-effort size of ``key`` from the warmest source that knows
+        it (tier entry, local file, CLOUD manifest); 0 when nobody does."""
+        if self.mrm is not None:
+            for cache in (self.mrm.device, self.mrm.host):
+                e = cache.peek(key)
+                if e is not None:
+                    return e.nbytes
+        disk = self.disk
+        if disk is not None and disk.contains(key):
+            try:
+                return os.path.getsize(disk.path_for(key))
+            except OSError:
+                pass
+        obj = self.objectstore
+        if obj is not None and hasattr(obj, "stat"):
+            st = obj.stat(key)
+            if st:
+                return st.get("nbytes", 0)
+        return 0
+
+    def estimated_ready_s(self, keys: Sequence[ModelKey]) -> float:
+        """Modeled seconds until every model in ``keys`` could be
+        DEVICE-resident here, priced from each one's current warmest tier
+        (0 for device hits, H2D for host, the pipelined staging chain for
+        disk, cloud fetch on top for absent). The router's deadline-slack
+        signal: a node's slack on a request is ``deadline - this``."""
+        if self.mrm is None:
+            return 0.0
+        hw = self.mrm.hw
+        total = 0.0
+        for k in keys:
+            key = ModelKey(*k)
+            w = self.warmth(key)
+            if w >= Tier.DEVICE.warmth:
+                continue
+            nbytes = self._model_nbytes(key)
+            if w == Tier.HOST.warmth:
+                total += hw.h2d_time(nbytes)
+            elif w == Tier.DISK.warmth:
+                total += hw.staging_pipelined_time(nbytes)
+            else:
+                total += (hw.cloud_fetch_time(nbytes)
+                          + hw.staging_pipelined_time(nbytes))
+        return total
+
     def load(self) -> int:
         return sum(c.acct.invocations for c in self.containers.values())
 
@@ -246,8 +372,14 @@ class Router:
     request's models at the warmest tier — a device-warm node beats a
     host-warm node beats a disk-cold one — falling back to least-loaded on
     ties, and issues prefetch hints to the chosen node so staging overlaps
-    dispatch. ``policy="round_robin"`` is the affinity-blind baseline the
-    cluster benchmark ablates against.
+    dispatch. A request carrying ``deadline_s`` breaks affinity ties by
+    *deadline slack* instead: among equally-warm nodes, the one whose
+    modeled time-to-model-ready (``estimated_ready_s``) leaves the most
+    slack before the deadline wins. ``policy="round_robin"`` is the
+    affinity-blind baseline the cluster benchmark ablates against.
+
+    Dispatch bookkeeping is guarded by an internal lock — concurrent
+    ``invoke`` calls from many client threads must not lose counts.
     """
 
     def __init__(self, nodes: Sequence[FaaSPlatform], policy: str = "affinity"):
@@ -256,9 +388,11 @@ class Router:
         self.nodes = list(nodes)
         self.policy = policy
         self._rr = itertools.count()
+        self._lock = threading.Lock()
         self.dispatches: Dict[str, int] = {n.name: 0 for n in self.nodes}
 
-    def route(self, fn_name: str, needed_models: Sequence[ModelKey] = ()) -> FaaSPlatform:
+    def route(self, fn_name: str, needed_models: Sequence[ModelKey] = (),
+              deadline_s: Optional[float] = None) -> FaaSPlatform:
         candidates = [n for n in self.nodes if fn_name in n.functions]
         if not candidates:
             raise KeyError(f"function {fn_name!r} not deployed on any node")
@@ -267,15 +401,25 @@ class Router:
 
         def score(node: FaaSPlatform):
             affinity = sum(node.warmth(ModelKey(*k)) for k in needed_models)
+            if deadline_s is not None:
+                # slack = deadline - estimated_ready; the deadline is the
+                # same for every candidate, so ranking by smallest modeled
+                # ready time IS ranking by largest slack
+                return (-affinity, node.estimated_ready_s(needed_models),
+                        node.load())
             return (-affinity, node.load())
 
         return min(candidates, key=score)
 
-    def invoke(self, fn_name: str, payload=None, needed_models=()):
+    def invoke(self, fn_name: str, payload=None, needed_models=(),
+               deadline_s: Optional[float] = None):
         """Route, issue prefetch for the needed models on the chosen node,
-        then dispatch — staging overlaps the dispatch/queueing latency."""
-        node = self.route(fn_name, needed_models)
-        self.dispatches[node.name] = self.dispatches.get(node.name, 0) + 1
+        then dispatch — staging overlaps the dispatch/queueing latency.
+        ``deadline_s`` flows into routing (slack tie-break) and down to the
+        node's SLO accounting."""
+        node = self.route(fn_name, needed_models, deadline_s=deadline_s)
+        with self._lock:
+            self.dispatches[node.name] = self.dispatches.get(node.name, 0) + 1
         if needed_models:
             node.prefetch_models(needed_models)
-        return node.invoke(fn_name, payload)
+        return node.invoke(fn_name, payload, deadline_s=deadline_s)

@@ -31,11 +31,17 @@ from typing import Callable, Dict, NamedTuple, Optional
 
 import numpy as np
 
-from repro.core.cache import Tier, TierCache, TierHierarchy
+from repro.core.cache import CostAware, Tier, TierCache, TierHierarchy
 from repro.core.costmodel import (HardwareModel, PIPELINE_CHUNK_BYTES,
                                   get_hardware)
 from repro.core.pipeline import plan_chunks, run_pipeline
+from repro.core.slo import DEFAULT_HORIZON_S, SLOState
 from repro.core.store import CloudStore, DiskStore, ModelFile, _np_dtype
+
+# write-back queue shutdown sentinel (MRM.shutdown)
+_WB_SENTINEL = object()
+# bound on the evicted-key tracking map feeding the misprediction metric
+_EVICT_TRACK_MAX = 1024
 
 
 class ModelKey(NamedTuple):
@@ -215,8 +221,26 @@ class MRM:
         # cluster hook (core.cluster): fn(key, timings) -> bool resolving a
         # DISK miss from a cheaper source (peer link) before the CLOUD tier
         self.remote_fetch: Optional[Callable] = None
-        self.device = TierCache(Tier.DEVICE, device_capacity, policy)
-        self.host = TierCache(Tier.HOST, host_capacity, policy)
+        # SLO-aware eviction (policy="slo", DESIGN.md §7): one shared
+        # arrival predictor feeds per-tier CostAware policies whose reload
+        # cost is priced from each tier's own backing tier
+        self.slo: Optional[SLOState] = None
+        device_policy = host_policy = policy
+        if policy == CostAware.name:
+            self.slo = SLOState(self.hw, self._device_backing_tier,
+                                self._host_backing_tier)
+            device_policy = CostAware(
+                self.slo.predictor,
+                cost_fn=lambda e: self.slo.estimator.reload_cost_s(
+                    e.key, e.nbytes),
+                horizon_fn=lambda: self.slo.horizon_s)
+            host_policy = CostAware(
+                self.slo.predictor,
+                cost_fn=lambda e: self.slo.host_estimator.reload_cost_s(
+                    e.key, e.nbytes),
+                horizon_fn=lambda: self.slo.horizon_s)
+        self.device = TierCache(Tier.DEVICE, device_capacity, device_policy)
+        self.host = TierCache(Tier.HOST, host_capacity, host_policy)
         self.tiers = TierHierarchy(self.device, self.host,
                                    demote_fn=self._demote_device_payload,
                                    demote_on_evict=demote_on_evict)
@@ -237,16 +261,41 @@ class MRM:
             "bytes_from_disk": 0, "bytes_h2d": 0,
             "prefetches": 0, "pipelined_loads": 0,
             "peer_fetches": 0, "cloud_writebacks": 0,
+            "cloud_writeback_errors": 0,
             # modeled seconds of work this node performed — survives open
             # coalescing (a coalesced waiter's own timings show a zero-cost
             # hit; the staging cost lives here, on the node that paid it)
             "modeled_fetch_s": 0.0, "modeled_stage_s": 0.0,
+            # SLO-aware eviction accounting (DESIGN.md §7): evictions whose
+            # key came back within the deadline horizon despite a
+            # farther-out prediction; host hits a demotion paid for; and
+            # modeled reload seconds attributable to earlier evictions
+            "mispredicted_evictions": 0, "demotion_saved_reloads": 0,
+            "evicted_reload_stalls": 0, "slo_stall_s": 0.0,
         }
+        # eviction-attribution state: device victims awaiting a possible
+        # return (key -> (t_evict, predicted_next_use_s)), keys whose
+        # HOST copy exists because eviction-as-demotion put it there, and
+        # a mirror of device residency the HOST policy may read under the
+        # host lock (peeking the device cache there would invert the
+        # DEVICE -> HOST lock order)
+        self._evicted_at: Dict[ModelKey, tuple] = {}
+        self._demoted_keys: set = set()
+        self._device_keys: set = set()
+        self._evict_lock = threading.Lock()
+        self.device.add_listener(self._on_device_event)
         self.writeback_to_cloud = writeback_to_cloud
         # codec for CLOUD write-backs (None -> the object store's default);
         # fetches always decode whatever codec the manifest records
         self.cloud_codec = cloud_codec
         self._wb_queue = None
+        self._wb_thread = None
+        self._wb_shutdown = False
+        # serializes {flag check, put} against shutdown's {flag set, put
+        # sentinel}: without it a straggler put can land after the worker
+        # exits and leave queue.join() waiting forever. Leaf lock (taken
+        # under the host cache lock by the listener).
+        self._wb_lock = threading.Lock()
         if writeback_to_cloud and objectstore is not None:
             self._start_writeback()
 
@@ -261,8 +310,116 @@ class MRM:
         import queue
         self._wb_queue = queue.Queue()
         self.host.add_listener(self._on_host_remove)
-        threading.Thread(target=self._writeback_worker, daemon=True,
-                         name="mrm-writeback").start()
+        self._wb_thread = threading.Thread(target=self._writeback_worker,
+                                           daemon=True, name="mrm-writeback")
+        self._wb_thread.start()
+
+    # ------------------------------------------- SLO-aware eviction support
+    def _device_backing_tier(self, key, nbytes: int) -> Optional[Tier]:
+        """Warmest tier that would still hold ``key`` after a DEVICE
+        eviction: HOST when it already holds a copy, or when
+        eviction-as-demotion would re-home the victim there AND the host
+        tier visibly has the room (demotion is best-effort — pricing a
+        doomed demotion as a host hit would make every victim look cheap);
+        else DISK, else None (CLOUD/refetch). Runs under the device lock —
+        only takes locks below it in the DEVICE -> HOST order."""
+        if self.host.peek(key) is not None:
+            return Tier.HOST
+        if (self.tiers.demote_on_evict and self.tiers.demote_fn is not None
+                and self.host.free_bytes() >= nbytes):
+            return Tier.HOST
+        return Tier.DISK if self.disk.contains(key) else None
+
+    def _host_backing_tier(self, key, nbytes: int) -> Optional[Tier]:
+        """After a HOST eviction the copy falls back to local disk (or all
+        the way to the CLOUD tier when the disk never held it) — unless a
+        DEVICE copy exists, in which case the host copy is redundant (a
+        later device eviction demotes it right back): cost ~0, so the
+        host tier sheds duplicates first and caches the next-hottest
+        working set below the device's (exclusive-ish hierarchy)."""
+        with self._evict_lock:
+            if key in self._device_keys:
+                return Tier.DEVICE
+        return Tier.DISK if self.disk.contains(key) else None
+
+    def note_deadline(self, deadline_s: Optional[float]) -> None:
+        """Fold a request deadline into the eviction policy's horizon
+        (no-op unless ``policy=\"slo\"``) — the FaaS layer calls this on
+        every deadline-carrying invoke (DESIGN.md §7)."""
+        if self.slo is not None and deadline_s:
+            self.slo.note_deadline(deadline_s)
+
+    def _now(self) -> float:
+        return self.slo.now() if self.slo is not None else time.monotonic()
+
+    def _on_device_event(self, event: str, entry) -> None:
+        """Device-cache listener (under the device lock — leaf locks only):
+        mirror device residency for the host policy, and remember when a
+        live entry left the device tier and how far away its next use was
+        predicted, so a quick return can be scored as a mispredicted
+        eviction and its reload stall attributed."""
+        if event == "insert":
+            with self._evict_lock:
+                self._device_keys.add(entry.key)
+            return
+        with self._evict_lock:
+            self._device_keys.discard(entry.key)
+        if entry.payload is None:  # placeholder rollback, not an eviction
+            return
+        now = self._now()
+        pred = (self.slo.predictor.predict_next_use_s(entry.key, now=now)
+                if self.slo is not None else None)
+        with self._evict_lock:
+            if len(self._evicted_at) >= _EVICT_TRACK_MAX:
+                self._evicted_at.pop(next(iter(self._evicted_at)))
+            self._evicted_at[entry.key] = (now, pred)
+
+    def _record_arrival(self, fut: LoadFuture) -> None:
+        """Feed the next-use predictor with *usage* events only: a
+        handle-carrying open records once — at its tier hit, on becoming
+        the primary loader, or on first coalescing onto a PREFETCH's
+        in-flight load (``_submit`` gates that last site). Prefetches are
+        hints, not usage, and never record; nor do opens coalescing onto
+        another open (a thundering herd is one demand event per load).
+        Anything else would double-count the router's prefetch + the
+        function's own open of the same key, halving every routed key's
+        EWMA gap and inflating its reuse probability."""
+        if self.slo is not None and fut.want_handle and not fut.coalesced:
+            self.slo.predictor.record(fut.key, now=self._now())
+
+    def _note_arrival(self, fut: LoadFuture) -> None:
+        """If the key was evicted from DEVICE earlier, attribute the
+        reload once the future lands (arrival *recording* happens in
+        ``_submit``, where coalescing is known)."""
+        key = fut.key
+        now = self._now()
+        with self._evict_lock:
+            info = self._evicted_at.pop(key, None)
+        if info is None or fut.tier != "device":
+            return
+        t_evict, pred = info
+        horizon = self.slo.horizon_s if self.slo is not None \
+            else DEFAULT_HORIZON_S
+        # mispredicted: the key returned within one deadline horizon of its
+        # eviction even though the predictor expected it farther out (or
+        # had nothing to say) — the eviction cost a deadline-relevant reload
+        mispredicted = ((now - t_evict) <= horizon
+                        and (pred is None or pred > horizon))
+
+        def account(f: LoadFuture):
+            t = f.timings
+            if f._exc is not None or t.tier_hit in ("", "device"):
+                return  # never reloaded (hit/coalesced/failed): no stall
+            stall = t.cloud_s + t.peer_s + (
+                t.h2d_modeled_s if t.tier_hit == "host"
+                else t.staging_pipelined_modeled_s)
+            with self._lock:
+                self.metrics["evicted_reload_stalls"] += 1
+                self.metrics["slo_stall_s"] += stall
+                if mispredicted:
+                    self.metrics["mispredicted_evictions"] += 1
+
+        fut.add_done_callback(account)
 
     # ------------------------------------------------------------------ API
     def open_async(self, key: ModelKey, activation_bytes: int = 0,
@@ -283,6 +440,7 @@ class MRM:
                 self.metrics["opens"] += 1
             else:
                 self.metrics["prefetches"] += 1
+        self._note_arrival(fut)
         self._submit(fut, inline=_inline)
         return fut
 
@@ -345,10 +503,15 @@ class MRM:
             if hit is not None:
                 fut.stage = "hit"
                 fut.timings.tier_hit = fut.tier
+                self._record_arrival(fut)
                 self._complete_hit(fut, hit)
                 return
             primary = self._inflight.get(key)
             if primary is not None:
+                if not primary.want_handle:
+                    # coalescing onto a prefetch's load: this open is the
+                    # first real usage of that staging work
+                    self._record_arrival(fut)
                 fut.coalesced = True
                 fut.stage = "coalesced"
                 self.metrics["coalesced_loads"] += 1
@@ -357,6 +520,7 @@ class MRM:
                 return
             self._inflight[key] = fut
             fut.state = LOADING
+            self._record_arrival(fut)
         if inline:
             self._run_load(fut)
         else:
@@ -461,6 +625,12 @@ class MRM:
             host_entry = self._load_host(key, timings, fut)  # still pinned
         else:
             timings.tier_hit = "host"
+            with self._evict_lock:
+                saved = key in self._demoted_keys
+                self._demoted_keys.discard(key)
+            if saved:  # this host copy exists because a demotion paid D2H
+                with self._lock:
+                    self.metrics["demotion_saved_reloads"] += 1
 
         if fut.tier == "host":
             # warm path: the provisional ref becomes the handle's ref (or is
@@ -518,11 +688,16 @@ class MRM:
         this node. Placeholder rollbacks (payload None) are not demotions.
         """
         if event == "remove" and entry.payload is not None:
-            self._wb_queue.put(entry.key)
+            with self._wb_lock:
+                if not self._wb_shutdown:
+                    self._wb_queue.put(entry.key)
 
     def _writeback_worker(self):
         while True:
             key = self._wb_queue.get()
+            if key is _WB_SENTINEL:
+                self._wb_queue.task_done()
+                return
             try:
                 # models are version-keyed and immutable: a key already in
                 # the object store needs no re-upload
@@ -532,8 +707,9 @@ class MRM:
                                               codec=self.cloud_codec)
                     with self._lock:
                         self.metrics["cloud_writebacks"] += 1
-            except Exception:  # noqa: BLE001 — write-back is best-effort
-                pass
+            except Exception:  # noqa: BLE001 — write-back stays best-effort,
+                with self._lock:  # but failures are no longer invisible
+                    self.metrics["cloud_writeback_errors"] += 1
             finally:
                 self._wb_queue.task_done()
 
@@ -541,6 +717,20 @@ class MRM:
         """Block until every queued CLOUD write-back has been processed."""
         if self._wb_queue is not None:
             self._wb_queue.join()
+
+    def shutdown(self, timeout: Optional[float] = 5.0) -> None:
+        """Drain and stop the background write-back worker (idempotent).
+
+        New demotions stop enqueueing immediately; everything already
+        queued is processed, then the worker exits on a sentinel. Safe to
+        call on an MRM that never had write-back enabled."""
+        with self._wb_lock:
+            self._wb_shutdown = True
+            thread, self._wb_thread = self._wb_thread, None
+            if thread is not None:
+                self._wb_queue.put(_WB_SENTINEL)
+        if thread is not None:
+            thread.join(timeout)
 
     def _shm_views(self, key, specs):
         """One segment with tensors packed back-to-back. ``specs`` is
@@ -623,6 +813,8 @@ class MRM:
         """
         key, timings = fut.key, fut.timings
         self._ensure_on_disk(key, timings)
+        with self._evict_lock:
+            self._demoted_keys.discard(key)  # any demoted copy lapsed
         mf = self.disk.open(key)
         nbytes = mf.total_bytes
 
@@ -636,17 +828,47 @@ class MRM:
             d_entry = self.device.insert(key, nbytes, payload=None)
             d_entry.pinned = True
         h_entry = None
+        adopted = None
         segs = []
         try:
             # reserve HOST room for the incoming model BEFORE demoting the
             # device victims into it — demoting first would pay the D2H copy
             # for entries this very reservation may immediately evict
             with self.host.lock:
-                self.tiers.make_room(Tier.HOST, nbytes)
-                h_entry = self.host.insert(key, nbytes, payload=None)
-                h_entry.pinned = True
+                existing = self.host.peek(key)
+                if existing is not None and existing.payload is not None:
+                    # a concurrent demotion (of OUR key, evicted by some
+                    # other model's load) re-homed it in HOST between the
+                    # host-miss check and this reservation. Models are
+                    # immutable, so the copy is interchangeable: take a
+                    # provisional ref and stage the device tier from it
+                    # instead of colliding on the insert
+                    existing.refcount += 1
+                    adopted = existing
+                else:
+                    self.tiers.make_room(Tier.HOST, nbytes)
+                    h_entry = self.host.insert(key, nbytes, payload=None)
+                    h_entry.pinned = True
             demoted = self.tiers.demote_evicted(evicted)
             timings.demote_s = sum(self.hw.d2h_time(v.nbytes) for v in demoted)
+            if demoted:
+                with self._evict_lock:
+                    self._demoted_keys.update(v.key for v in demoted)
+            if adopted is not None:
+                # hand our device reservation back (stage_device re-reserves
+                # atomically) and run the warm HOST -> DEVICE chain
+                with self.device.lock:
+                    if self.device.peek(key) is d_entry:
+                        self.device.remove(key)
+                timings.tier_hit = "host"
+                try:
+                    dev_entry = self._stage_device(
+                        key, adopted, fut.activation_bytes, timings, fut)
+                finally:
+                    with self.host.lock:
+                        adopted.refcount -= 1
+                return self._finish_entry(fut, self.device, dev_entry,
+                                          unpin=True)
 
             arrays, segs, write = self._host_sink(mf, key, nbytes)
             weights: Dict[str, object] = {}
@@ -708,10 +930,21 @@ class MRM:
         Returns the entry STILL PINNED; the caller releases the pin once
         the handle refcount (or device staging) no longer needs it."""
         self._ensure_on_disk(key, timings)
+        with self._evict_lock:
+            self._demoted_keys.discard(key)  # any demoted copy lapsed
         mf = self.disk.open(key)
         nbytes = mf.total_bytes
 
         with self.host.lock:
+            entry = self.host.peek(key)
+            if entry is not None and entry.payload is not None:
+                # a concurrent demotion re-homed this key between the
+                # host-miss check and this reservation; the copy is
+                # interchangeable (models are immutable) — adopt it,
+                # pinned exactly as a fresh load would be
+                entry.pinned = True
+                timings.tier_hit = "host"
+                return entry
             self.tiers.make_room(Tier.HOST, nbytes)
             entry = self.host.insert(key, nbytes, payload=None)
             entry.pinned = True
@@ -781,6 +1014,9 @@ class MRM:
         try:
             demoted = self.tiers.demote_evicted(evicted)
             timings.demote_s = sum(self.hw.d2h_time(v.nbytes) for v in demoted)
+            if demoted:
+                with self._evict_lock:
+                    self._demoted_keys.update(v.key for v in demoted)
             if self.pipelined_staging:
                 chunks = plan_chunks([(n, a.nbytes) for n, a in hm.arrays.items()],
                                      self.staging_chunk_bytes)

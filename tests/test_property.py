@@ -40,7 +40,7 @@ def cache_ops(draw):
     return ops, sizes
 
 
-@given(cache_ops(), st.sampled_from(["lru", "lcu", "fifo", "largest"]))
+@given(cache_ops(), st.sampled_from(["lru", "lcu", "fifo", "largest", "slo"]))
 @settings(max_examples=60, deadline=None)
 def test_tier_cache_invariants(ops_sizes, policy):
     ops, sizes = ops_sizes
@@ -77,7 +77,7 @@ def test_tier_cache_invariants(ops_sizes, policy):
 
 @given(st.lists(st.tuples(st.sampled_from(["open", "close"]),
                           st.integers(0, 3)), min_size=1, max_size=24),
-       st.sampled_from(["lru", "lcu"]))
+       st.sampled_from(["lru", "lcu", "slo"]))
 @settings(max_examples=20, deadline=None)
 def test_mrm_random_open_close(tmp_path_factory, ops, policy):
     tmp = tmp_path_factory.mktemp("mrm")
@@ -113,6 +113,40 @@ def test_mrm_random_open_close(tmp_path_factory, ops, policy):
         for h in hs:
             mrm.close(h)
     assert all(e.refcount == 0 for e in mrm.device.entries.values())
+
+
+# ---------------------------------------------------------------- CostAware
+@given(st.lists(st.tuples(st.integers(1, 8),      # entry size
+                          st.integers(0, 30),     # arrivals recorded
+                          st.integers(1, 40)),    # inter-arrival gap (x10ms)
+                min_size=1, max_size=8),
+       st.floats(0.01, 2.0))
+@settings(max_examples=60, deadline=None)
+def test_costaware_victims_first_ordering(specs, horizon):
+    """CostAware.order is victims-first: ascending in the policy's own
+    score (expected reload cost x reuse probability per byte), and a
+    permutation of its input — for ANY mix of seen/unseen keys."""
+    from repro.core.cache import CacheEntry, CostAware
+    from repro.core.slo import NextUsePredictor
+    now = 1000.0
+    clock = [now]
+    pred = NextUsePredictor(clock=lambda: clock[0])
+    entries = []
+    for i, (size, n_arrivals, gap_ds) in enumerate(specs):
+        key, gap = f"m{i}", gap_ds * 0.01
+        t = now - n_arrivals * gap
+        for _ in range(n_arrivals):
+            pred.record(key, now=t)
+            t += gap
+        e = CacheEntry(key=key, nbytes=size)
+        e.last_used = now - gap
+        entries.append(e)
+    pol = CostAware(pred, horizon_fn=lambda: horizon)
+    ordered = pol.order(list(entries))
+    assert sorted(e.key for e in ordered) == sorted(e.key for e in entries)
+    scores = [pol.score(e, now) for e in ordered]
+    assert scores == sorted(scores)
+    assert all(s >= 0.0 for s in scores)
 
 
 # ---------------------------------------------------------------- SSD

@@ -1,0 +1,488 @@
+"""SLO-aware eviction (core.slo + CostAware) and serving-path concurrency.
+
+Covers the DESIGN.md §7 stack — predictor on synthetic arrival traces,
+reload-cost pricing per backing tier, victims-first CostAware ordering,
+MRM metrics wiring, deadline plumbing through FaaSPlatform/Router — plus
+the concurrency fixes that rode along: accounting under the container
+lock, bounded latency stats, thread-safe Router dispatch counts, and the
+write-back worker's shutdown/error path.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (CostAware, DiskStore, FaaSPlatform, MRM, ModelKey,
+                        NextUsePredictor, ReloadCostEstimator, Router, Tier,
+                        TierCache, make_policy)
+from repro.core.cache import CacheEntry
+from repro.core.costmodel import HardwareModel
+from repro.core.faas import LatencyStats
+
+MB = 1 << 20
+
+
+def _tensors(nbytes=1 * MB, n=2, seed=0):
+    rng = np.random.default_rng(seed)
+    per = nbytes // n // 4
+    return {f"w{i}": rng.standard_normal(per).astype(np.float32)
+            for i in range(n)}
+
+
+# ------------------------------------------------------------- predictor
+class TestNextUsePredictor:
+    def test_ewma_gap_converges_on_periodic_trace(self):
+        clock = [0.0]
+        p = NextUsePredictor(clock=lambda: clock[0])
+        for _ in range(20):
+            p.record("k")
+            clock[0] += 0.05
+        assert p.mean_gap_s("k") == pytest.approx(0.05, rel=1e-6)
+        # next use predicted one gap after the last arrival
+        assert p.predict_next_use_s("k") == pytest.approx(0.0, abs=1e-9)
+        clock[0] -= 0.03  # 0.02s after the last arrival
+        assert p.predict_next_use_s("k") == pytest.approx(0.03, rel=1e-6)
+
+    def test_hot_key_outranks_cold_key(self):
+        clock = [0.0]
+        p = NextUsePredictor(clock=lambda: clock[0])
+        for i in range(100):
+            p.record("hot")          # every tick
+            if i % 10 == 0:
+                p.record("cold")     # every 10 ticks
+            clock[0] += 0.01
+        hot = p.reuse_probability("hot", horizon_s=0.05)
+        cold = p.reuse_probability("cold", horizon_s=0.05)
+        assert hot > cold > 0.0
+
+    def test_unseen_key_returns_none(self):
+        p = NextUsePredictor()
+        assert p.mean_gap_s("nope") is None
+        assert p.predict_next_use_s("nope") is None
+        assert p.reuse_probability("nope", 1.0) is None
+
+    def test_dead_stream_fades_out(self):
+        from repro.core.slo import OVERDUE_DECAY_GAPS
+        clock = [0.0]
+        p = NextUsePredictor(clock=lambda: clock[0])
+        for _ in range(10):
+            p.record("dead")
+            clock[0] += 0.01
+        fresh = p.reuse_probability("dead", horizon_s=0.1)
+        # far past many multiples of the gap, the stream is presumed dead
+        clock[0] += 0.01 * OVERDUE_DECAY_GAPS * 10
+        stale = p.reuse_probability("dead", horizon_s=0.1)
+        assert stale < fresh / 20
+
+    def test_bounded_key_count_drops_stalest(self):
+        clock = [0.0]
+        p = NextUsePredictor(clock=lambda: clock[0], max_keys=8)
+        for i in range(50):
+            p.record(f"k{i}")
+            clock[0] += 1.0
+        assert len(p) == 8
+        assert p.mean_gap_s("k0") is None       # stalest dropped
+        assert p.arrivals("k49") == 1           # newest kept
+
+    def test_single_arrival_uses_idle_time_as_gap(self):
+        clock = [0.0]
+        p = NextUsePredictor(clock=lambda: clock[0], default_gap_s=0.1)
+        p.record("once")
+        clock[0] += 5.0
+        # one arrival, idle 5s: predicted next use ~5s out, low probability
+        assert p.predict_next_use_s("once") <= 5.0
+        assert p.reuse_probability("once", horizon_s=0.1) < 0.5
+
+
+# ------------------------------------------------------- cost estimator
+class TestReloadCostEstimator:
+    def test_prices_rise_with_colder_backing_tier(self):
+        hw = HardwareModel()
+        tiers = {}
+        est = ReloadCostEstimator(hw, lambda k, nb: tiers[k])
+        nb = 64 * MB
+        tiers.update(dev=Tier.DEVICE, host=Tier.HOST, disk=Tier.DISK,
+                     cloud=None)
+        c = {k: est.reload_cost_s(k, nb) for k in tiers}
+        assert c["dev"] == 0.0
+        assert c["dev"] < c["host"] < c["disk"] < c["cloud"]
+        assert c["host"] == pytest.approx(hw.h2d_time(nb))
+        assert c["disk"] == pytest.approx(hw.staging_pipelined_time(nb))
+
+
+# ---------------------------------------------------- CostAware ordering
+class TestCostAware:
+    def _entry(self, key, nbytes, last_used):
+        e = CacheEntry(key=key, nbytes=nbytes)
+        e.last_used = last_used
+        return e
+
+    def test_victims_first_orders_by_cost_times_probability(self):
+        clock = [100.0]
+        pred = NextUsePredictor(clock=lambda: clock[0])
+        t = 0.0
+        while t < 100.0:  # hot: 10ms gaps; cold: 1s gaps
+            pred.record("hot", now=t)
+            t += 0.01
+        t = 0.0
+        while t < 100.0:
+            pred.record("cold", now=t)
+            t += 1.0
+        costs = {"hot": 1.0, "cold": 1.0, "pricey-cold": 100.0}
+        pred.record("pricey-cold", now=0.0)
+        pred.record("pricey-cold", now=99.0)  # gap 99s: cold, but expensive
+        pol = CostAware(pred, cost_fn=lambda e: costs[e.key],
+                        horizon_fn=lambda: 0.1)
+        entries = [self._entry("hot", MB, 99.99),
+                   self._entry("cold", MB, 99.0),
+                   self._entry("pricey-cold", MB, 99.0)]
+        order = [e.key for e in pol.order(entries)]
+        # cheapest expected loss evicted first; the hot entry is kept last;
+        # high reload cost lifts a cold entry above an equally cold cheap one
+        assert order[0] == "cold"
+        assert order[-1] == "hot"
+
+    def test_size_normalization_protects_hot_small_entries(self):
+        clock = [10.0]
+        pred = NextUsePredictor(clock=lambda: clock[0])
+        t = 0.0
+        while t < 10.0:
+            pred.record("hot-small", now=t)
+            t += 0.01
+        pred.record("cold-big", now=0.0)
+        pred.record("cold-big", now=9.0)
+        hw = HardwareModel()
+        pol = CostAware(pred, cost_fn=lambda e: hw.h2d_time(e.nbytes),
+                        horizon_fn=lambda: 0.1)
+        entries = [self._entry("hot-small", 1 * MB, 9.99),
+                   self._entry("cold-big", 64 * MB, 9.0)]
+        # absolute reload cost favors the big entry 64x, but per byte freed
+        # the hot small entry is worth far more — the cold giant goes first
+        assert [e.key for e in pol.order(entries)] == ["cold-big", "hot-small"]
+
+    def test_make_policy_slo_constructs_fresh_costaware(self):
+        a, b = make_policy("slo"), make_policy("slo")
+        assert isinstance(a, CostAware) and isinstance(b, CostAware)
+        assert a is not b and a.predictor is not b.predictor
+        assert make_policy("lru") is make_policy("lru")  # singletons shared
+
+    def test_tier_cache_accepts_slo_policy(self):
+        c = TierCache(Tier.DEVICE, 4 * MB, "slo")
+        c.make_room(MB)
+        c.insert("a", MB)
+        c.insert("b", MB)
+        evicted = c.make_room(3 * MB)
+        assert {e.key for e in evicted} <= {"a", "b"}
+        assert c.used + 3 * MB <= c.capacity
+
+
+# ------------------------------------------------------ MRM integration
+class TestMRMSloWiring:
+    @pytest.fixture
+    def disk(self, tmp_path):
+        d = DiskStore(str(tmp_path / "d"))
+        for i in range(5):
+            d.put(ModelKey("jax", f"m{i}"), _tensors(seed=i))
+        return d
+
+    def test_slo_policy_retains_hot_key_under_pressure(self, disk):
+        mrm = MRM(disk, device_capacity=int(2.5 * MB),
+                  host_capacity=int(2.5 * MB), policy="slo")
+        clock = [0.0]
+        mrm.slo.predictor.clock = lambda: clock[0]
+        trace = [0, 1, 2, 0, 3, 4, 0] * 5
+        for i in trace:
+            h = mrm.open(ModelKey("jax", f"m{i}"))
+            mrm.close(h)
+            clock[0] += 0.01
+        assert mrm.resident(ModelKey("jax", "m0"), Tier.DEVICE)
+        stats = mrm.stats()
+        assert stats["device"]["policy"] == "slo"
+        # the hot key was loaded from disk exactly once
+        assert stats["disk_loads"] < len(trace)
+
+    def test_eviction_reload_stalls_attributed(self, disk):
+        mrm = MRM(disk, device_capacity=int(1.5 * MB),
+                  host_capacity=int(1.5 * MB), policy="slo")
+        clock = [0.0]
+        mrm.slo.predictor.clock = lambda: clock[0]
+        for i in [0, 1, 0, 1, 0, 1]:  # two models, device fits one
+            h = mrm.open(ModelKey("jax", f"m{i}"))
+            mrm.close(h)
+            clock[0] += 0.01
+        stats = mrm.stats()
+        # every reload follows an eviction of the same key moments earlier
+        # — but these are NOT mispredictions: the predictor expected each
+        # key straight back (gap 0.02s << horizon); capacity forced them
+        assert stats["evicted_reload_stalls"] > 0
+        assert stats["slo_stall_s"] > 0.0
+        assert stats["mispredicted_evictions"] == 0
+
+    def test_mispredicted_eviction_counted_on_surprise_return(self, disk):
+        mrm = MRM(disk, device_capacity=int(1.5 * MB),
+                  host_capacity=int(1.5 * MB), policy="slo")
+        clock = [0.0]
+        mrm.slo.predictor.clock = lambda: clock[0]
+
+        def open_at(t, i):
+            clock[0] = t
+            mrm.close(mrm.open(ModelKey("jax", f"m{i}")))
+
+        for t in (0.0, 5.0, 10.0):
+            open_at(t, 0)               # m0 learns a 5s gap
+        open_at(10.01, 1)               # evicts m0, predicted ~5s away
+        open_at(10.02, 0)               # ...back 10ms later: mispredicted
+        assert mrm.stats()["mispredicted_evictions"] == 1
+
+    def test_demotion_saved_reload_counted(self, disk):
+        # bench_pipeline's rotation: device AND host each fit ~2 of 3
+        # models, so the cold chain's host copy gets evicted while its
+        # model is still device-resident, and the later device eviction
+        # pays a real D2H demotion — whose host hit on re-open is the
+        # saved reload. Under LRU on purpose: the slo policy avoids these
+        # demotions entirely (it sheds device-duplicates from HOST first),
+        # and the metric wiring is policy-independent.
+        mrm = MRM(disk, device_capacity=int(2.2 * MB),
+                  host_capacity=int(2.2 * MB), policy="lru")
+        tier_hits = []
+        for i in [0, 1, 2] * 3:
+            h = mrm.open(ModelKey("jax", f"m{i}"))
+            tier_hits.append(h.timings.tier_hit)
+            mrm.close(h)
+        stats = mrm.stats()
+        assert stats["demotions"] >= 1
+        assert "host" in tier_hits
+        assert stats["demotion_saved_reloads"] >= 1
+        # a demotion-saved reload never exceeds the host hits it explains
+        assert stats["demotion_saved_reloads"] <= tier_hits.count("host")
+
+    def test_prefetch_plus_open_records_one_arrival(self, disk):
+        """Regression: a router-style prefetch immediately followed by the
+        function's own open of the same key is ONE usage event — recording
+        both would halve the key's EWMA gap and inflate its reuse
+        probability (cold: the open coalesces onto the prefetch's load;
+        warm: the prefetch is a pure hint and only the open records)."""
+        mrm = MRM(disk, device_capacity=16 * MB, host_capacity=32 * MB,
+                  policy="slo")
+        key = ModelKey("jax", "m0")
+        for _ in range(3):  # cold first round, warm after
+            mrm.prefetch(key).result()
+            mrm.close(mrm.open(key))
+        assert mrm.slo.predictor.arrivals(key) == 3
+
+    def test_note_deadline_updates_horizon(self, disk):
+        mrm = MRM(disk, policy="slo")
+        before = mrm.slo.horizon_s
+        for _ in range(50):
+            mrm.note_deadline(2.0)
+        assert mrm.slo.horizon_s > before
+        assert mrm.slo.horizon_s == pytest.approx(2.0, rel=0.1)
+        mrm.note_deadline(None)  # no-ops must not raise
+        MRM(disk, policy="lru").note_deadline(1.0)
+
+
+class TestLoadDemotionRace:
+    def test_concurrent_open_evict_never_collides_on_host(self, tmp_path):
+        """Regression: a device eviction's demotion could insert a key
+        into HOST between a cold loader's host-miss check and its host
+        reservation ("already resident in HOST"). The loader now adopts
+        the interchangeable demoted copy instead of colliding."""
+        import random
+        from repro.core.cache import CapacityError
+
+        disk = DiskStore(str(tmp_path / "d"))
+        for i in range(8):
+            disk.put(ModelKey("jax", f"m{i}"), _tensors(seed=i))
+        mrm = MRM(disk, device_capacity=3 * MB, host_capacity=4 * MB,
+                  policy="slo")
+        errs = []
+
+        def worker(seed):
+            rng = random.Random(seed)
+            for _ in range(40):
+                key = ModelKey("jax", f"m{rng.randrange(8)}")
+                try:
+                    h = mrm.open(key)
+                    np.asarray(h.weights["w0"])
+                    mrm.close(h)
+                except CapacityError:
+                    pass  # all entries referenced by peers: legal
+                except Exception as e:  # noqa: BLE001
+                    errs.append(e)
+
+        threads = [threading.Thread(target=worker, args=(s,))
+                   for s in range(8)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(60)
+        assert not any(t.is_alive() for t in threads), "workers deadlocked"
+        assert not errs, errs[:3]
+        assert mrm.device.used <= mrm.device.capacity
+        assert mrm.host.used <= mrm.host.capacity
+
+
+# ----------------------------------------------------- write-back worker
+class TestWritebackShutdown:
+    def _mrm(self, tmp_path, objectstore):
+        disk = DiskStore(str(tmp_path / "d"))
+        disk.put(ModelKey("jax", "m"), _tensors())
+        return MRM(disk, device_capacity=8 * MB, host_capacity=8 * MB,
+                   objectstore=objectstore, writeback_to_cloud=True)
+
+    def test_shutdown_drains_and_stops_worker(self, tmp_path):
+        from repro.core import ObjectStore
+        obj = ObjectStore(str(tmp_path / "cloud"))
+        mrm = self._mrm(tmp_path, obj)
+        h = mrm.open(ModelKey("jax", "m"))
+        mrm.close(h)
+        mrm.host.remove(ModelKey("jax", "m"))  # demotion event -> enqueue
+        mrm.shutdown()
+        assert mrm.metrics["cloud_writebacks"] == 1
+        assert obj.contains(ModelKey("jax", "m"))
+        # worker is gone; further host removals must not enqueue
+        assert mrm._wb_thread is None
+        mrm.shutdown()  # idempotent
+
+    def test_writeback_errors_are_counted(self, tmp_path):
+        class BrokenStore:
+            def contains(self, key):
+                return False
+
+            def put_file(self, key, path, codec=None):
+                raise IOError("upload failed")
+
+        mrm = self._mrm(tmp_path, BrokenStore())
+        h = mrm.open(ModelKey("jax", "m"))
+        mrm.close(h)
+        mrm.host.remove(ModelKey("jax", "m"))
+        mrm.flush_writebacks()
+        assert mrm.metrics["cloud_writeback_errors"] == 1
+        assert mrm.metrics["cloud_writebacks"] == 0
+        mrm.shutdown()
+
+
+# ------------------------------------------------------- FaaS/Router SLO
+class TestFaaSConcurrencyAndDeadlines:
+    def _platform(self, tmp_path, n_models=1):
+        disk = DiskStore(str(tmp_path / "disk"))
+        for i in range(n_models):
+            disk.put(ModelKey("jax", f"m{i}"), _tensors(seed=i))
+        mrm = MRM(disk, device_capacity=32 * MB, host_capacity=64 * MB)
+        return FaaSPlatform(mrm)
+
+    def test_concurrent_invoke_accounting_exact(self, tmp_path):
+        platform = self._platform(tmp_path)
+        platform.deploy("f", lambda ctx, p: p)
+        n_threads, per_thread = 8, 50
+        errs = []
+
+        def worker():
+            try:
+                for _ in range(per_thread):
+                    platform.invoke("f", 1, deadline_s=10.0)
+            except Exception as e:  # noqa: BLE001
+                errs.append(e)
+
+        threads = [threading.Thread(target=worker) for _ in range(n_threads)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert not errs
+        acct = platform.containers["f"].acct
+        total = n_threads * per_thread
+        assert acct.invocations == total
+        assert acct.latencies.count == total
+        assert acct.slo_invocations == total
+        assert acct.total_s == pytest.approx(acct.latencies.total_s)
+
+    def test_router_dispatch_counts_survive_races(self, tmp_path):
+        nodes = []
+        for i in range(3):
+            disk = DiskStore(str(tmp_path / f"disk{i}"))
+            disk.put(ModelKey("jax", "m"), _tensors(seed=i))
+            node = FaaSPlatform(MRM(disk, device_capacity=16 * MB),
+                                name=f"node{i}")
+            node.deploy("f", lambda ctx, p: p)
+            nodes.append(node)
+        router = Router(nodes, policy="round_robin")
+        n_threads, per_thread = 8, 100
+
+        def worker():
+            for _ in range(per_thread):
+                router.invoke("f")
+
+        threads = [threading.Thread(target=worker) for _ in range(n_threads)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert sum(router.dispatches.values()) == n_threads * per_thread
+
+    def test_deadline_violation_accounting(self, tmp_path):
+        platform = self._platform(tmp_path)
+        platform.deploy("slow", lambda ctx, p: time.sleep(0.02))
+        platform.invoke("slow", deadline_s=1e-4)   # blown
+        platform.invoke("slow", deadline_s=10.0)   # met
+        platform.invoke("slow")                    # no deadline: not scored
+        acct = platform.containers["slow"].acct
+        assert acct.invocations == 3
+        assert acct.slo_invocations == 2
+        assert acct.slo_violations == 1
+        assert acct.slo_slack_s < 10.0
+
+    def test_router_deadline_slack_tiebreak(self, tmp_path):
+        key = ModelKey("jax", "m0")
+        warm, cold = (self._platform(tmp_path / "a"),
+                      self._platform(tmp_path / "b"))
+        for i, p in enumerate((warm, cold)):
+            p.name = f"node{i}"
+            p.deploy("f", lambda ctx, pl: pl, prewarm=False)
+        # warm the first node's HOST tier only: equal DEVICE warmth (0 vs 0
+        # is not the case — host beats disk), so give both disk copies and
+        # check the slack tie-break picks the host-warm node
+        warm.mrm.open(key, tier="host")
+        assert warm.estimated_ready_s([key]) < cold.estimated_ready_s([key])
+        router = Router([cold, warm])  # listed cold-first on purpose
+        assert router.route("f", [key], deadline_s=0.05) is warm
+
+    def test_estimated_ready_s_orders_by_tier(self, tmp_path):
+        p = self._platform(tmp_path, n_models=3)
+        k0, k1 = ModelKey("jax", "m0"), ModelKey("jax", "m1")
+        h = p.mrm.open(k0)                 # device-resident
+        p.mrm.open(k1, tier="host")        # host-resident
+        dev = p.estimated_ready_s([k0])
+        host = p.estimated_ready_s([k1])
+        disk = p.estimated_ready_s([ModelKey("jax", "m2")])
+        assert dev == 0.0
+        assert dev < host < disk
+        p.mrm.close(h)
+
+
+# ---------------------------------------------------------- LatencyStats
+class TestLatencyStats:
+    def test_streaming_summary_is_exact_and_bounded(self):
+        s = LatencyStats(reservoir_size=64)
+        xs = [float(i) for i in range(1000)]
+        for x in xs:
+            s.append(x)
+        assert s.count == 1000
+        assert s.total_s == pytest.approx(sum(xs))
+        assert s.min_s == 0.0 and s.max_s == 999.0
+        assert s.mean() == pytest.approx(sum(xs) / len(xs))
+        assert len(s) == 64  # bounded regardless of stream length
+
+    def test_early_indexing_preserved(self):
+        s = LatencyStats()
+        s.append(0.5)
+        s.append(0.1)
+        assert s[0] == 0.5 and s[1] == 0.1
+
+    def test_quantile_on_uniform_stream(self):
+        s = LatencyStats(reservoir_size=512, seed=3)
+        for i in range(5000):
+            s.append(i / 5000.0)
+        assert s.quantile(0.5) == pytest.approx(0.5, abs=0.1)
+        assert s.quantile(0.99) >= s.quantile(0.5)
