@@ -1,7 +1,8 @@
-"""Cluster-wide sharing ablations: CLOUD tier, peer fetch, router affinity.
+"""Cluster-wide sharing ablations: CLOUD tier, peer fetch, router affinity,
+and sharded multi-source gather.
 
 Reproduces the paper's cross-server claim (§4.2 multi-node) on the modeled
-timeline, with two ablation switches:
+timeline, with three ablation switches:
 
   * ``--ablate-fetch`` (default on): every node of a 3-node cluster opens
     the same rotation of models. With peer fetch disabled each cold node
@@ -13,6 +14,12 @@ timeline, with two ablation switches:
     keeps each model pinned to the node already holding it at the warmest
     tier, so steady-state requests are device hits instead of disk/cloud
     reloads.
+  * ``--sharded``: the DESIGN.md §8 sweep — a model LARGER than any single
+    node's device tier, scattered as shards across the fleet, gathered
+    from many sources in parallel. Sweeps shard size x node count and
+    asserts the multi-source gather beats the best single-source fetch on
+    modeled cold-open time whenever at least two peers hold shards.
+    ``--smoke`` shrinks the model for the CI fast gate.
 
 All decisive numbers are *modeled* seconds (cloud/peer legs from the cost
 model, H2D at the TPU PCIe rate) — the proxy files are tiny, so wall time
@@ -24,9 +31,11 @@ import os
 import shutil
 import tempfile
 
+import numpy as np
+
 from benchmarks.common import DISPATCH_FLOOR_S, write_csv
 from repro.core import (Cluster, DiskStore, FaaSPlatform, HardwareModel,
-                        MRM, ObjectStore, Router)
+                        MRM, ModelKey, ObjectStore, Router)
 from repro.core.proxyzoo import populate_store, small_specs
 
 # 7 models (coprime with the node count, so a round-robin router really does
@@ -163,7 +172,96 @@ def run_routing_ablation(root: str, obj: ObjectStore, keys, total_bytes,
     return rows
 
 
-def run(scale: float = None, fetch=True, routing=True, verbose=True):
+# shard-size x node-count grid for the §8 gather sweep; the model is
+# sized so it CANNOT fit any single node's device tier (device capacity
+# is a quarter of it) — the paper's large-model regime
+SHARDED_GRID = {
+    True: {"model_mb": 6, "shard_kib": (256, 512, 1024), "nodes": (3, 5)},
+    False: {"model_mb": 48, "shard_kib": (1024, 4096, 8192),
+            "nodes": (3, 4, 5)},
+}
+
+
+def run_sharded_sweep(root: str, smoke: bool = True, verbose=True):
+    """Shard size x node count: multi-source gather vs best single source.
+
+    Per cell: one model larger than any node's device tier, published
+    sharded to the CLOUD store and scattered round-robin across every
+    node but the gatherer. The gatherer's cold open (host tier — the
+    model cannot be device-resident whole) pays the modeled gather leg;
+    the single-source baseline is the cheaper of the whole-model cloud
+    fetch and a whole-model fetch from one disk-capped peer. All decisive
+    numbers are modeled (datasheet HardwareModel); the tiny proxy files
+    prove the mechanism.
+    """
+    grid = SHARDED_GRID[bool(smoke)]
+    nbytes_target = grid["model_mb"] << 20
+    hw = HardwareModel()
+    rng = np.random.default_rng(0)
+    # incompressible payload: shard ratio stays 1, isolating the gather
+    tensors = {f"w{i}": rng.standard_normal(nbytes_target // 4 // 4)
+               .astype(np.float32) for i in range(4)}
+    rows = []
+    for shard_kib in grid["shard_kib"]:
+        for n_nodes in grid["nodes"]:
+            cell = os.path.join(root, f"s{shard_kib}n{n_nodes}")
+            obj = ObjectStore(os.path.join(cell, "cloud"),
+                              shard_bytes=shard_kib << 10)
+            key = ModelKey("jax", "GPT-oversized", "1")
+            obj.put(key, tensors)
+            nbytes = obj.nbytes(key)
+            cluster = Cluster(objectstore=obj)
+            for i in range(n_nodes):
+                cluster.add_node(
+                    f"node{i}",
+                    MRM(DiskStore(os.path.join(cell, f"disk{i}")),
+                        device_capacity=nbytes // 4,   # > any device tier
+                        host_capacity=nbytes * 4, hw=hw))
+            peers = [f"node{i}" for i in range(1, n_nodes)]
+            cluster.scatter(key, node_names=peers)
+            n0 = cluster.node("node0")
+            h = n0.mrm.open(key, tier="host")
+            gather_s = h.timings.gather_s
+            n0.mrm.close(h)
+            # best single source: the whole-model cloud link, or one
+            # whole-model peer transfer (disk-capped stream)
+            single_s = min(obj.modeled_fetch_s(key),
+                           hw.peer_fetch_time(nbytes, peer_disk=True))
+            staging_s = hw.staging_pipelined_time(nbytes)
+            stats = n0.stats()
+            row = {"ablation": "sharded", "shard_kib": shard_kib,
+                   "nodes": n_nodes, "model_bytes": nbytes,
+                   "n_shards": len(obj.shard_table(key)),
+                   "gather_s": gather_s, "best_single_s": single_s,
+                   "cold_open_gather_s": gather_s + staging_s,
+                   "cold_open_single_s": single_s + staging_s,
+                   "fetch_speedup": single_s / max(gather_s, 1e-9),
+                   "shards_from_peers": stats["shards_from_peers"],
+                   "shards_from_cloud": stats["shards_from_cloud"]}
+            rows.append(row)
+            assert h.timings.tier_hit == "gather", \
+                "the oversized model must resolve via the gather path"
+            assert row["cold_open_gather_s"] < row["cold_open_single_s"], \
+                (f"gather must beat the best single source at "
+                 f"shard={shard_kib}KiB nodes={n_nodes}")
+            if verbose:
+                print(f"  shard {shard_kib:>5}KiB x {n_nodes} nodes: "
+                      f"gather {gather_s*1e3:7.1f}ms vs single "
+                      f"{single_s*1e3:7.1f}ms "
+                      f"({row['fetch_speedup']:.1f}x, "
+                      f"peers x{row['shards_from_peers']}, "
+                      f"cloud x{row['shards_from_cloud']})")
+            shutil.rmtree(cell, ignore_errors=True)
+    best = max(rows, key=lambda r: r["fetch_speedup"])
+    if verbose:
+        print(f"  => best cell: shard {best['shard_kib']}KiB x "
+              f"{best['nodes']} nodes, {best['fetch_speedup']:.1f}x less "
+              f"modeled fetch time than the best single source")
+    return rows
+
+
+def run(scale: float = None, fetch=True, routing=True, sharded=True,
+        smoke=True, verbose=True):
     scale = scale if scale is not None else \
         float(os.environ.get("TRIMS_BENCH_SCALE", "0.03"))
     root = tempfile.mkdtemp(prefix="trims_cluster_")
@@ -197,6 +295,11 @@ def run(scale: float = None, fetch=True, routing=True, verbose=True):
             if verbose:
                 print(f"  => affinity {robin['modeled_total_s'] / aff['modeled_total_s']:.1f}x "
                       f"less modeled request time")
+        if sharded:
+            if verbose:
+                print("-- sharded gather: shard size x node count "
+                      "(model > any device tier) --")
+            rows += run_sharded_sweep(root, smoke=smoke, verbose=verbose)
     finally:
         shutil.rmtree(root, ignore_errors=True)
     write_csv("cluster_ablation", rows)
@@ -213,5 +316,18 @@ if __name__ == "__main__":
     ap.add_argument("--ablate-routing", dest="routing", action="store_true",
                     default=True)
     ap.add_argument("--no-routing", dest="routing", action="store_false")
+    ap.add_argument("--sharded", action="store_true",
+                    help="run ONLY the sharded-gather sweep (DESIGN.md §8)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="small model / short grid for the CI fast gate")
     args = ap.parse_args()
-    run(scale=args.scale, fetch=args.fetch, routing=args.routing)
+    if args.sharded:
+        root = tempfile.mkdtemp(prefix="trims_sharded_")
+        try:
+            write_csv("cluster_sharded",
+                      run_sharded_sweep(root, smoke=args.smoke))
+        finally:
+            shutil.rmtree(root, ignore_errors=True)
+    else:
+        run(scale=args.scale, fetch=args.fetch, routing=args.routing,
+            smoke=args.smoke)

@@ -72,7 +72,10 @@ def run(env: BenchEnv | None = None, n_requests: int = 60,
     rows = []
     for pct in pcts:
         for conc in concurrencies:
-            reqs = sample_models(env, n_requests, pct, seed=hash((pct, conc)) % 9999)
+            # explicit per-cell seed (was hash((pct, conc)) — opaque for
+            # the audit trail); round, not int: 0.29*100 truncates to 28
+            reqs = sample_models(env, n_requests, pct,
+                                 seed=round(pct * 100) * 1000 + conc)
             # oversubscribed: device tier = half the zoo footprint
             mrm = env.make_mrm(device_frac=0.5, policy="lru")
             t_trims, lat_trims = run_batch_trims(env, mrm, reqs, conc)

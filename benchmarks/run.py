@@ -72,16 +72,23 @@ def main() -> None:
     out.append(("ablation_eviction", 0.0,
                 f"hit_rate_spread={spread:.3f};policies=lru,lcu,fifo,largest"))
 
-    print("== cluster: cloud vs warm-peer fetch + routing affinity ==", flush=True)
+    print("== cluster: cloud vs warm-peer fetch + routing affinity "
+          "+ sharded gather ==", flush=True)
     from benchmarks import bench_cluster
-    rows_c = bench_cluster.run(verbose=True)
-    by_cfg = {r["config"]: r for r in rows_c}
+    rows_c = bench_cluster.run(smoke=not args.full, verbose=True)
+    by_cfg = {r["config"]: r for r in rows_c if "config" in r}
     n_fetches = (by_cfg["warm-peer"]["cloud_fetches"]
                  + by_cfg["warm-peer"]["peer_fetches"])
     out.append(("cluster_ablation",
                 1e6 * by_cfg["warm-peer"]["modeled_fetch_s"] / max(1, n_fetches),
                 f"peer_speedup={by_cfg['cloud-only']['modeled_fetch_s'] / by_cfg['warm-peer']['modeled_fetch_s']:.1f}x;"
                 f"affinity_speedup={by_cfg['round_robin']['modeled_total_s'] / by_cfg['affinity']['modeled_total_s']:.1f}x"))
+    sharded = [r for r in rows_c if r.get("ablation") == "sharded"]
+    best = max(sharded, key=lambda r: r["fetch_speedup"])
+    out.append(("cluster_sharded_gather", 1e6 * best["cold_open_gather_s"],
+                f"gather_speedup={best['fetch_speedup']:.1f}x;"
+                f"shard_kib={best['shard_kib']};nodes={best['nodes']};"
+                f"cells={len(sharded)}"))
 
     print("== SLO: eviction x routing under oversubscription ==", flush=True)
     from benchmarks import bench_slo

@@ -30,7 +30,16 @@ REQUIRED_CONTENT = [
     ("DESIGN.md", "decompress"),
     ("DESIGN.md", "Compressed transfer"),
     ("DESIGN.md", "SLO-aware eviction"),
+    ("DESIGN.md", "Sharded placement & collective staging"),
+    ("DESIGN.md", "gather_time"),
+    ("DESIGN.md", "Partial-residency routing"),
     (os.path.join("docs", "API.md"), "ClusterDirectory"),
+    (os.path.join("docs", "API.md"), "shard_bytes"),
+    (os.path.join("docs", "API.md"), "fetch_shard"),
+    (os.path.join("docs", "API.md"), "gather_time"),
+    (os.path.join("docs", "API.md"), "scatter"),
+    (os.path.join("docs", "API.md"), "residency"),
+    (os.path.join("docs", "API.md"), "generation"),
     (os.path.join("docs", "API.md"), "ObjectStore"),
     (os.path.join("docs", "API.md"), "gc_blobs"),
     (os.path.join("docs", "API.md"), "codec"),

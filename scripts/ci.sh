@@ -2,6 +2,8 @@
 # Tier-1 CI entry point.
 #
 #   scripts/ci.sh           full suite (the tier-1 command from ROADMAP.md)
+#                           + repro.core coverage gate when pytest-cov is
+#                           available (the container does not bake it in)
 #   scripts/ci.sh --fast    skip tests marked `slow` (end-to-end train/serve
 #                           and subprocess-compile suites) for a quick gate
 #
@@ -25,5 +27,18 @@ if [[ "${1:-}" == "--fast" ]]; then
     # violation rate in the oversubscribed cells, and match LRU on the
     # non-oversubscribed parity rotation (asserted inside the benchmark)
     python -m benchmarks.bench_slo --smoke
+    # sharded multi-source gather (DESIGN.md §8): the collective staging
+    # of a device-oversized model must beat the best single-source fetch
+    # in every shard-size x node-count cell (asserted inside the benchmark)
+    python -m benchmarks.bench_cluster --sharded --smoke
+else
+    # coverage gate for the paper-core package (full mode only): enforced
+    # whenever pytest-cov is importable; the floor tracks the suite, so
+    # new core/ code without tests fails the full gate
+    if python -c "import pytest_cov" 2>/dev/null; then
+        ARGS+=(--cov=repro.core --cov-fail-under=70)
+    else
+        echo "ci.sh: pytest-cov not installed - skipping the coverage gate"
+    fi
 fi
 exec python -m pytest "${ARGS[@]}" "$@"

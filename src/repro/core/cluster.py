@@ -1,21 +1,29 @@
-"""Cluster-wide model sharing (paper §4.2 multi-node, DESIGN.md §6).
+"""Cluster-wide model sharing (paper §4.2 multi-node, DESIGN.md §6, §8).
 
 Single-node TrIMS makes every process on a machine share one copy of a
 model; this module makes every *machine* in a cluster share the work of
 fetching one. A :class:`ClusterDirectory` tracks which node holds which
-model at which tier, and each :class:`ClusterNode` plugs a source-selection
-hook into its MRM's DISK-miss path: pull the model over the modeled peer
-link from a node that already holds it when the cost model says that beats
-the CLOUD tier, otherwise fall through to the object store.
+model (and which **shards** of it) at which tier, and each
+:class:`ClusterNode` plugs a source-selection hook into its MRM's
+DISK-miss path: pull the model over the modeled peer link from a node that
+already holds it when the cost model says that beats the CLOUD tier, or —
+for sharded manifests — **gather** the shards from several sources in
+parallel (peer A ∥ peer B ∥ cloud), assembling them into one local file
+(DESIGN.md §8 collective staging).
 
 Directory consistency (DESIGN.md §6): entries are *hints*, maintained by
 tier-cache listeners (publish on insert, withdraw on remove) plus a DISK
 publish whenever a model lands on a node's local store. A stale hint is
 safe — peer fetch re-verifies the peer's disk copy before transferring and
-returns the miss to the MRM's CLOUD fall-through.
+returns the miss to the MRM's CLOUD fall-through; a stale *shard* hint
+falls back to the CLOUD copy of that shard without aborting the gather.
+Every ``drop_node`` bumps the directory ``generation``; source plans carry
+the generation they were made at and re-validate on mismatch, so an
+in-flight fetch never charges a link to a node that has left the cluster.
 """
 from __future__ import annotations
 
+import hashlib
 import os
 import shutil
 import threading
@@ -28,18 +36,36 @@ from repro.core.pipeline import PipelineReport, run_pipeline
 from repro.core.store import atomic_dest_file
 
 
+class _StaleSourceError(LookupError):
+    """A planned fetch source went away (dropped node / vanished copy)."""
+
+
 class ClusterDirectory:
-    """Cluster-wide map: model key -> {node name -> tiers held}. Thread-safe.
+    """Cluster-wide map: model key -> {node name -> tiers held}, plus the
+    per-shard table key -> shard index -> {node -> tiers}. Thread-safe.
 
     The directory lock is a *leaf* lock: publish/withdraw are called from
     tier-cache listeners (under a cache lock) and never call back into any
     cache, so the only lock order is cache -> directory.
+
+    Hints can never resurrect a dropped node: ``publish``/``publish_shard``
+    ignore node names that are not currently registered, and ``drop_node``
+    bumps :attr:`generation` so in-flight source plans re-validate.
     """
 
     def __init__(self):
         self._lock = threading.Lock()
         self._where: Dict[ModelKey, Dict[str, Set[Tier]]] = {}
+        self._shards: Dict[ModelKey, Dict[int, Dict[str, Set[Tier]]]] = {}
         self._nodes: Dict[str, "ClusterNode"] = {}
+        self._generation = 0
+
+    @property
+    def generation(self) -> int:
+        """Monotonic membership epoch: bumped by every ``drop_node``.
+        Source plans snapshot it and re-validate on mismatch (§8)."""
+        with self._lock:
+            return self._generation
 
     # -- membership ---------------------------------------------------------
     def register(self, node: "ClusterNode"):
@@ -57,15 +83,26 @@ class ClusterDirectory:
             return list(self._nodes.values())
 
     def drop_node(self, name: str):
-        """Remove a node and every placement hint pointing at it; the
-        node's cache listeners and remote-fetch hook are detached so it
-        cannot republish itself into the directory."""
+        """Remove a node and every placement hint (whole-model and shard)
+        pointing at it; the node's cache listeners and remote-fetch hook
+        are detached so it cannot republish itself into the directory, and
+        the directory generation is bumped so in-flight source plans
+        re-validate instead of charging the dead link."""
         with self._lock:
             node = self._nodes.pop(name, None)
+            self._generation += 1
             for key in list(self._where):
                 self._where[key].pop(name, None)
                 if not self._where[key]:
                     del self._where[key]
+            for key in list(self._shards):
+                table = self._shards[key]
+                for idx in list(table):
+                    table[idx].pop(name, None)
+                    if not table[idx]:
+                        del table[idx]
+                if not table:
+                    del self._shards[key]
         if node is not None:
             node.detach()
 
@@ -73,6 +110,8 @@ class ClusterDirectory:
     def publish(self, node_name: str, key: ModelKey, tier: Tier):
         key = ModelKey(*key)
         with self._lock:
+            if node_name not in self._nodes:
+                return  # dropped (or never-registered) nodes stay gone
             self._where.setdefault(key, {}).setdefault(node_name, set()).add(tier)
 
     def withdraw(self, node_name: str, key: ModelKey, tier: Tier):
@@ -90,6 +129,40 @@ class ClusterDirectory:
                 del holders[node_name]
             if not holders:
                 del self._where[key]
+
+    def publish_shard(self, node_name: str, key: ModelKey, index: int,
+                      tier: Tier):
+        """Record that ``node_name`` holds shard ``index`` of ``key`` at
+        ``tier`` (same hint semantics as :meth:`publish`)."""
+        key = ModelKey(*key)
+        with self._lock:
+            if node_name not in self._nodes:
+                return
+            self._shards.setdefault(key, {}).setdefault(index, {}) \
+                .setdefault(node_name, set()).add(tier)
+
+    def withdraw_shard(self, node_name: str, key: ModelKey, index: int,
+                       tier: Optional[Tier] = None):
+        """Drop ``node_name``'s hint for one shard (all tiers when
+        ``tier`` is None)."""
+        key = ModelKey(*key)
+        with self._lock:
+            table = self._shards.get(key)
+            if not table or index not in table:
+                return
+            tiers = table[index].get(node_name)
+            if tiers is None:
+                return
+            if tier is None:
+                tiers.clear()
+            else:
+                tiers.discard(tier)
+            if not tiers:
+                del table[index][node_name]
+            if not table[index]:
+                del table[index]
+            if not table:
+                del self._shards[key]
 
     # -- queries --------------------------------------------------------------
     def holders(self, key: ModelKey,
@@ -114,10 +187,35 @@ class ClusterDirectory:
             tiers = self._where.get(key, {}).get(node_name)
             return min(tiers, key=lambda t: t.value) if tiers else None
 
+    def shard_holders(self, key: ModelKey, index: int,
+                      exclude: Optional[str] = None) -> List[Tuple[str, Tier]]:
+        """``(node_name, warmest_tier)`` per node holding shard ``index``
+        of ``key`` (explicit shard placements only — whole-model holders
+        serve every shard and are listed by :meth:`holders`)."""
+        key = ModelKey(*key)
+        with self._lock:
+            table = self._shards.get(key, {}).get(index, {})
+            out = [(name, min(tiers, key=lambda t: t.value))
+                   for name, tiers in table.items()
+                   if tiers and name != exclude]
+        return sorted(out, key=lambda nt: nt[1].value)
+
+    def shards_on(self, key: ModelKey, node_name: str) -> List[int]:
+        """Shard indices ``node_name`` holds explicit placements for."""
+        key = ModelKey(*key)
+        with self._lock:
+            return sorted(idx for idx, holders
+                          in self._shards.get(key, {}).items()
+                          if node_name in holders and holders[node_name])
+
     def stats(self) -> dict:
         with self._lock:
             return {"models": len(self._where), "nodes": len(self._nodes),
-                    "placements": sum(len(h) for h in self._where.values())}
+                    "placements": sum(len(h) for h in self._where.values()),
+                    "shard_placements": sum(
+                        len(holders) for table in self._shards.values()
+                        for holders in table.values()),
+                    "generation": self._generation}
 
 
 class ClusterNode:
@@ -126,17 +224,20 @@ class ClusterNode:
     Construction registers the node with the directory, publishes its disk
     contents, subscribes listeners on the MRM's DEVICE/HOST tier caches, and
     installs :meth:`fetch_for` as the MRM's ``remote_fetch`` hook so every
-    DISK miss source-selects between the peer link and the CLOUD tier.
+    DISK miss source-selects between the peer link, a multi-source shard
+    gather (§8), and the CLOUD tier.
     """
 
     def __init__(self, name: str, mrm: MRM, directory: ClusterDirectory,
                  peer_fetch: bool = True,
-                 peer_codec=None):  # codec name or a tuned Codec instance
+                 peer_codec=None,  # codec name or a tuned Codec instance
+                 gather: bool = True):
         self.name = name
         self.mrm = mrm
         self.directory = directory
         self.hw = mrm.hw
         self.peer_fetch_enabled = peer_fetch
+        self.gather_enabled = gather
         # wire codec for peer transfers (None = raw copy). The cost compare
         # estimates the ratio from the CLOUD manifest when it knows the key
         # (falls back to sampling the peer's file), and the actual transfer
@@ -152,8 +253,22 @@ class ClusterNode:
         # cloud downloads are counted by the MRM (metrics["cloud_downloads"])
         # — the node only tracks the peer traffic it originates/serves
         self.metrics = {"peer_fetches": 0, "peer_serves": 0,
-                        "bytes_from_peers": 0, "bytes_on_wire": 0}
+                        "bytes_from_peers": 0, "bytes_on_wire": 0,
+                        # §8 collective staging
+                        "gather_fetches": 0, "gather_coalesced": 0,
+                        "shards_from_peers": 0, "shards_from_cloud": 0,
+                        "shards_local": 0, "shard_serves": 0,
+                        "gather_fallbacks": 0, "plan_replans": 0}
         self._metrics_lock = threading.Lock()  # leaf; never held over another
+        # concurrent gathers of one key coalesce onto one set of shard
+        # fetches: key -> Event carrying .ok once the primary finishes
+        self._gather_lock = threading.Lock()
+        self._gather_inflight: Dict[ModelKey, threading.Event] = {}
+        # shard_fraction cache (router hot path): key -> locally-held
+        # shard bytes, invalidated whenever the local shard set changes
+        # — without it every Router.score stats every shard file
+        self._shard_held: Dict[ModelKey, int] = {}
+        self._shard_held_lock = threading.Lock()  # leaf
         directory.register(self)
         for key in mrm.disk.keys():
             directory.publish(name, ModelKey(*key), Tier.DISK)
@@ -194,6 +309,88 @@ class ClusterNode:
         if t is not None:
             return t
         return Tier.DISK if self.mrm.disk.contains(key) else None
+
+    # -- local shard cache (§8) ----------------------------------------------
+    def _shard_path(self, key: ModelKey, index: int) -> str:
+        fw, name, ver = key
+        return os.path.join(self.mrm.disk.root, ".shards", fw,
+                            f"{name}@{ver}", f"{index:06d}.shard")
+
+    def has_shard(self, key: ModelKey, index: int) -> bool:
+        return os.path.exists(self._shard_path(ModelKey(*key), index))
+
+    def store_shard(self, key: ModelKey, index: int, data: bytes) -> None:
+        """Pre-position one shard of ``key`` in this node's local shard
+        cache and publish the placement (the scatter half of §8)."""
+        key = ModelKey(*key)
+        with atomic_dest_file(self._shard_path(key, index),
+                              prefix=".shard-") as (fd, _):
+            with os.fdopen(fd, "wb") as f:
+                f.write(data)
+        self.directory.publish_shard(self.name, key, index, Tier.DISK)
+        with self._shard_held_lock:
+            self._shard_held.pop(key, None)  # refreshed on next query
+
+    def local_shards(self, key: ModelKey) -> List[int]:
+        """Shard indices present in this node's local shard cache."""
+        key = ModelKey(*key)
+        d = os.path.dirname(self._shard_path(key, 0))
+        if not os.path.isdir(d):
+            return []
+        out = []
+        for fn in os.listdir(d):
+            if fn.endswith(".shard"):
+                try:
+                    out.append(int(fn[:-len(".shard")]))
+                except ValueError:
+                    continue
+        return sorted(out)
+
+    def shard_fraction(self, key: ModelKey) -> float:
+        """Fraction of ``key``'s bytes present in the local shard cache —
+        the router's partial-residency signal (0.0 without a sharded
+        CLOUD manifest to size against). Held bytes are cached per key
+        and invalidated on every shard-set change, so the dispatch hot
+        path pays one dict lookup, not one stat() per shard."""
+        key = ModelKey(*key)
+        obj = self.mrm.objectstore
+        if obj is None or not hasattr(obj, "stat"):
+            return 0.0
+        with self._shard_held_lock:
+            held = self._shard_held.get(key)
+        if held is not None and held == 0:
+            return 0.0  # common case: node holds nothing — skip the stat
+        st = obj.stat(key)
+        if not st or not st.get("shards"):
+            return 0.0
+        if held is None:
+            held = sum(s["nbytes"] for s in st["shards"]
+                       if self.has_shard(key, s["index"]))
+            with self._shard_held_lock:
+                self._shard_held[key] = held
+        return held / max(1, st["nbytes"])
+
+    def _forget_local_shard(self, key: ModelKey, index: int) -> None:
+        """Drop one local shard copy and its placement hint (corrupt or
+        superseded), invalidating the held-bytes cache."""
+        key = ModelKey(*key)
+        try:
+            os.unlink(self._shard_path(key, index))
+        except OSError:
+            pass
+        self.directory.withdraw_shard(self.name, key, index)
+        with self._shard_held_lock:
+            self._shard_held.pop(key, None)
+
+    def _drop_local_shards(self, key: ModelKey) -> None:
+        """Clear the local shard cache for ``key`` and withdraw the hints
+        (a full local copy supersedes the shards)."""
+        key = ModelKey(*key)
+        for idx in self.local_shards(key):
+            self._forget_local_shard(key, idx)
+        d = os.path.dirname(self._shard_path(key, 0))
+        if os.path.isdir(d) and not os.listdir(d):
+            os.rmdir(d)
 
     # -- peer-to-peer fetch ---------------------------------------------------
     def _wire_ratio(self, key: ModelKey, src_path: str) -> float:
@@ -296,42 +493,45 @@ class ClusterNode:
         wire_bytes = report.stage("compress").bytes + len(tail)
         return wire_bytes, report
 
-    def fetch_for(self, key: ModelKey, timings) -> bool:
-        """MRM ``remote_fetch`` hook: resolve a DISK miss from the cheapest
-        source. Returns True when the model was pulled from a peer; False
-        hands the miss back to the MRM's CLOUD fall-through (which is also
-        the answer when the cost model says the cloud link is cheaper).
-        Both sides of the compare are compression-aware: the peer leg at
-        the estimated wire ratio, the cloud leg at the blob's real stored
-        size (DESIGN.md §6)."""
-        key = ModelKey(*key)
-        best = self._cheapest_peer(key) if self.peer_fetch_enabled else None
-        if best is None:
-            return False  # the MRM's fall-through pays the CLOUD leg
-        peer, peer_tier, peer_s, nbytes, ratio = best
-        cloud_s = self._cloud_link_time(key, nbytes)
-        source, _ = self.hw.pick_fetch_source(
-            nbytes, have_peer=True, have_cloud=cloud_s is not None,
-            peer_s=peer_s, cloud_s=cloud_s)
-        if source != "peer":
-            return False
+    def _pull_from_peer(self, key: ModelKey, peer: "ClusterNode",
+                        peer_tier: Tier, peer_s: float, nbytes: int,
+                        ratio: float, timings, plan_gen: int) -> bool:
+        """Execute a planned single-source peer transfer. Returns False —
+        without charging the link — when the plan went stale mid-flight
+        (the peer left the cluster after ``plan_gen``, or its copy
+        vanished); the caller re-plans."""
         src = peer.mrm.disk.path_for(key)
         dst = self.mrm.disk.path_for(key)
-        # unique temp name: concurrent fetches of one key must not share a
-        # staging file (the loser's replace would raise) — last writer wins
-        with atomic_dest_file(dst, prefix=".peer-") as (fd, tmp):
-            if ratio > 1.0:
-                wire_bytes, report = self._transfer_compressed(src, fd)
-                timings.decompress_s += report.stage("decompress").busy_s
-                timings.stage_overlap_s += report.overlap_s()
-                # re-model at the ratio the wire actually saw
-                peer_s = self.hw.peer_fetch_time(
-                    nbytes, peer_disk=peer_tier == Tier.DISK,
-                    ratio=max(1.0, nbytes / max(1, wire_bytes)))
-            else:
-                os.close(fd)
-                shutil.copyfile(src, tmp)
-                wire_bytes = nbytes
+        try:
+            # unique temp name: concurrent fetches of one key must not
+            # share a staging file (the loser's replace would raise) —
+            # last writer wins
+            with atomic_dest_file(dst, prefix=".peer-") as (fd, tmp):
+                if ratio > 1.0:
+                    wire_bytes, report = self._transfer_compressed(src, fd)
+                    timings.decompress_s += report.stage("decompress").busy_s
+                    timings.stage_overlap_s += report.overlap_s()
+                    # re-model at the ratio the wire actually saw
+                    peer_s = self.hw.peer_fetch_time(
+                        nbytes, peer_disk=peer_tier == Tier.DISK,
+                        ratio=max(1.0, nbytes / max(1, wire_bytes)))
+                else:
+                    os.close(fd)
+                    shutil.copyfile(src, tmp)
+                    wire_bytes = nbytes
+                # generation re-validation (§8 bugfix): a peer dropped
+                # after planning must not be charged as a live link — the
+                # data it "sent" is discarded and the fetch re-plans
+                if (self.directory.generation != plan_gen
+                        and self.directory.node(peer.name) is None):
+                    raise _StaleSourceError(peer.name)
+        except _StaleSourceError:
+            with self._metrics_lock:
+                self.metrics["plan_replans"] += 1
+            return False
+        except FileNotFoundError:
+            # the peer's copy vanished mid-transfer (stale hint): re-plan
+            return False
         timings.peer_s = peer_s
         with self._metrics_lock:
             self.metrics["peer_fetches"] += 1
@@ -343,6 +543,294 @@ class ClusterNode:
             self.mrm.metrics["peer_fetches"] += 1
             self.mrm.metrics["modeled_fetch_s"] += peer_s
         self.directory.publish(self.name, key, Tier.DISK)
+        return True
+
+    def fetch_for(self, key: ModelKey, timings) -> bool:
+        """MRM ``remote_fetch`` hook: resolve a DISK miss from the cheapest
+        source. Returns True when the model was pulled from the cluster (a
+        peer, or a §8 multi-source gather); False hands the miss back to
+        the MRM's CLOUD fall-through (which is also the answer when the
+        cost model says the cloud link is cheaper). Both sides of the
+        compare are compression-aware: the peer leg at the estimated wire
+        ratio, the cloud leg at the blob's real stored size (DESIGN.md §6).
+        Source plans re-validate against the directory generation and
+        re-plan when the membership changed under them."""
+        key = ModelKey(*key)
+        obj = self.mrm.objectstore
+        if (self.gather_enabled and obj is not None
+                and hasattr(obj, "stat")):
+            st = obj.stat(key)
+            if st and st.get("shards") and self._gather(key, st, timings):
+                return True
+        for _ in range(3):  # bounded re-plans on directory-epoch changes
+            # snapshot the epoch BEFORE scanning holders: a node dropped
+            # between the scan and a later snapshot would not trip the
+            # mismatch check and the dead link would be charged
+            plan_gen = self.directory.generation
+            best = self._cheapest_peer(key) if self.peer_fetch_enabled \
+                else None
+            if best is None:
+                return False  # the MRM's fall-through pays the CLOUD leg
+            peer, peer_tier, peer_s, nbytes, ratio = best
+            cloud_s = self._cloud_link_time(key, nbytes)
+            source, _ = self.hw.pick_fetch_source(
+                nbytes, have_peer=True, have_cloud=cloud_s is not None,
+                peer_s=peer_s, cloud_s=cloud_s)
+            if source != "peer":
+                return False
+            if self._pull_from_peer(key, peer, peer_tier, peer_s, nbytes,
+                                    ratio, timings, plan_gen):
+                return True
+        return False
+
+    # -- collective multi-source staging (§8) ---------------------------------
+    def plan_shard_sources(self, key: ModelKey, st: dict):
+        """Build a per-shard source plan for a sharded manifest entry.
+
+        Candidates per shard: the local shard cache (free), every verified
+        whole-model peer holder (serves any shard by slicing its file),
+        explicit shard holders, and the CLOUD store. Shards are assigned
+        greedily to the source whose accumulated link time stays smallest
+        (LPT-style balancing), so the plan's modeled cost is
+        ``hw.gather_time`` over the per-source loads — parallel links
+        saturating at the local ingest bandwidth.
+
+        Returns ``(rows, modeled_gather_s, plan_generation)`` or None when
+        no source can supply some shard. Each row is ``{index, offset,
+        nbytes, source: "local"|"peer"|"cloud", node, modeled_s}``.
+        """
+        shards = st["shards"]
+        shard_bytes = st.get("shard_bytes") or (shards[0]["nbytes"]
+                                                if shards else 0)
+        gen = self.directory.generation
+        obj = self.mrm.objectstore
+        cloud_ok = obj is not None and obj.contains(key)
+        # verify whole-model holders once per plan, not once per shard
+        full_holders = []
+        for name, tier in self.directory.holders(key, exclude=self.name):
+            peer = self.directory.node(name)
+            if (self.peer_fetch_enabled and peer is not None
+                    and peer.mrm.disk.contains(key)):
+                full_holders.append((name, tier))
+        load: Dict[tuple, float] = {}
+        wire_bytes = 0  # bytes crossing the NIC (local shards are free)
+        rows = []
+        for s in shards:
+            options = {}  # source id -> (kind, node, per-shard seconds)
+            if self.has_shard(key, s["index"]):
+                options[("local", None)] = ("local", None, 0.0)
+            if self.peer_fetch_enabled:
+                holders = list(full_holders)
+                for name, tier in self.directory.shard_holders(
+                        key, s["index"], exclude=self.name):
+                    peer = self.directory.node(name)
+                    if peer is not None and peer.has_shard(key, s["index"]):
+                        holders.append((name, tier))
+                for name, tier in holders:
+                    t = self.hw.peer_fetch_time(
+                        s["nbytes"], peer_disk=tier == Tier.DISK)
+                    sid = ("peer", name)
+                    if sid not in options or t < options[sid][2]:
+                        options[sid] = ("peer", name, t)
+            if cloud_ok:
+                options[("cloud", None)] = (
+                    "cloud", None, obj.modeled_shard_fetch_s(key, s["index"]))
+            if not options:
+                return None
+            sid = min(options,
+                      key=lambda i: load.get(i, 0.0) + options[i][2])
+            kind, node, t = options[sid]
+            load[sid] = load.get(sid, 0.0) + t
+            if kind != "local":
+                wire_bytes += s["nbytes"]
+            rows.append({"index": s["index"],
+                         "offset": s["index"] * shard_bytes,
+                         "nbytes": s["nbytes"], "source": kind,
+                         "node": node, "modeled_s": t})
+        modeled = self.hw.gather_time(load.values(), wire_bytes)
+        return rows, modeled, gen
+
+    def _read_peer_shard(self, peer: Optional["ClusterNode"],
+                         key: ModelKey, st: dict, srow: dict) -> bytes:
+        """Pull one shard from a peer — a slice of its whole-model file or
+        its shard-cache copy — digest-verified. Raises on stale hints and
+        corruption; the gather falls back to CLOUD."""
+        if peer is None:
+            raise _StaleSourceError("peer left the cluster")
+        shard_bytes = st.get("shard_bytes") or srow["nbytes"]
+        if peer.mrm.disk.contains(key):
+            with open(peer.mrm.disk.path_for(key), "rb") as f:
+                f.seek(srow["index"] * shard_bytes)
+                data = f.read(srow["nbytes"])
+        elif peer.has_shard(key, srow["index"]):
+            with open(peer._shard_path(key, srow["index"]), "rb") as f:
+                data = f.read()
+        else:
+            raise _StaleSourceError("stale shard hint")
+        if (len(data) != srow["nbytes"]
+                or hashlib.sha256(data).hexdigest() != srow["digest"]):
+            raise IOError(f"{key} shard {srow['index']}: "
+                          f"corrupt copy on {peer.name}")
+        with peer._metrics_lock:
+            peer.metrics["shard_serves"] += 1
+        return data
+
+    def _fetch_one_shard(self, key: ModelKey, st: dict, row: dict,
+                         plan_gen: int, acct: dict) -> bytes:
+        """Resolve one shard of a gather: planned source first, CLOUD as
+        the transparent fallback for dead/stale/corrupt sources. Never
+        raises for a recoverable source failure — only when the CLOUD leg
+        itself cannot supply the shard (which aborts the gather).
+        ``acct`` accumulates the links actually used — per-source modeled
+        loads plus the bytes that really crossed the NIC (local shards
+        are free)."""
+        srow = st["shards"][row["index"]]
+        source, node_name = row["source"], row["node"]
+        if source == "peer" and self.directory.generation != plan_gen \
+                and self.directory.node(node_name) is None:
+            # the planned peer left the cluster after planning: re-plan
+            # this shard rather than charging the dead link (§8 bugfix)
+            with self._metrics_lock:
+                self.metrics["plan_replans"] += 1
+            source = None
+        if source == "local":
+            try:
+                with open(self._shard_path(key, row["index"]), "rb") as f:
+                    data = f.read()
+                if hashlib.sha256(data).hexdigest() == srow["digest"]:
+                    with self._metrics_lock:
+                        self.metrics["shards_local"] += 1
+                    return data
+            except OSError:
+                pass
+            # corrupt/vanished local copy: stop advertising it — leaving
+            # the file and its hint would make this node re-serve the bad
+            # shard to itself and every planning peer forever
+            self._forget_local_shard(key, row["index"])
+            source = None
+        if source == "peer":
+            try:
+                data = self._read_peer_shard(self.directory.node(node_name),
+                                             key, st, srow)
+                with self._metrics_lock:
+                    self.metrics["shards_from_peers"] += 1
+                    self.metrics["bytes_from_peers"] += srow["nbytes"]
+                    self.metrics["bytes_on_wire"] += srow["nbytes"]
+                loads = acct["loads"]
+                loads[("peer", node_name)] = \
+                    loads.get(("peer", node_name), 0.0) + row["modeled_s"]
+                acct["wire_bytes"] += srow["nbytes"]
+                return data
+            except (OSError, LookupError):
+                with self._metrics_lock:
+                    self.metrics["gather_fallbacks"] += 1
+                source = None
+        # CLOUD leg (planned, or the fallback for everything above)
+        obj = self.mrm.objectstore
+        if obj is None:
+            raise FileNotFoundError(
+                f"{key} shard {row['index']}: no remaining source")
+        modeled, data = obj.fetch_shard(key, row["index"])
+        with self._metrics_lock:
+            self.metrics["shards_from_cloud"] += 1
+        loads = acct["loads"]
+        loads[("cloud", None)] = loads.get(("cloud", None), 0.0) + modeled
+        acct["wire_bytes"] += srow["nbytes"]
+        return data
+
+    def _gather(self, key: ModelKey, st: dict, timings) -> bool:
+        """Multi-source collective staging (§8): assemble ``key`` on local
+        disk from its shard table, pulling from several sources in
+        parallel. Returns False when a single source is modeled cheaper
+        (the ordinary peer/cloud path then runs) or when assembly fails
+        (the CLOUD fall-through re-fetches whole). Concurrent gathers of
+        one key coalesce onto one set of shard fetches."""
+        with self._gather_lock:
+            ev = self._gather_inflight.get(key)
+            primary = ev is None
+            if primary:
+                ev = threading.Event()
+                ev.ok = False
+                self._gather_inflight[key] = ev
+        if not primary:
+            with self._metrics_lock:
+                self.metrics["gather_coalesced"] += 1
+            ev.wait()
+            # the primary paid the gather; this caller's open proceeds
+            # from local disk with zero additional fetch cost
+            if ev.ok and self.mrm.disk.contains(key):
+                timings.tier_hit = "gather"
+                return True
+            return False
+        try:
+            ev.ok = self._gather_run(key, st, timings)
+        finally:
+            with self._gather_lock:
+                del self._gather_inflight[key]
+            ev.set()
+        return ev.ok
+
+    def _gather_run(self, key: ModelKey, st: dict, timings) -> bool:
+        plan = self.plan_shard_sources(key, st)
+        if plan is None:
+            return False
+        rows, gather_s, plan_gen = plan
+        # a gather only pays when it beats the best single source (the
+        # cheapest whole-model peer, or the CLOUD link); otherwise decline
+        # and let the ordinary source-selection run
+        singles = []
+        cloud_whole = self._cloud_link_time(key, st["nbytes"])
+        if cloud_whole is not None:
+            singles.append(cloud_whole)
+        best_peer = self._cheapest_peer(key) if self.peer_fetch_enabled \
+            else None
+        if best_peer is not None:
+            singles.append(best_peer[2])
+        if singles and min(singles) <= gather_s:
+            return False
+        dst = self.mrm.disk.path_for(key)
+        acct = {"loads": {}, "wire_bytes": 0}
+        try:
+            with atomic_dest_file(dst, prefix=".gather-") as (fd, tmp):
+                try:
+                    os.ftruncate(fd, st["nbytes"])
+
+                    def shard_fetch(row):
+                        return row, self._fetch_one_shard(key, st, row,
+                                                          plan_gen, acct)
+
+                    def assemble(item):
+                        row, data = item
+                        os.pwrite(fd, data, row["offset"])
+                        return len(data)
+
+                    run_pipeline(rows,
+                                 [("shard_fetch", shard_fetch,
+                                   lambda r: len(r[1])),
+                                  ("assemble", assemble)],
+                                 depth=4)
+                finally:
+                    os.close(fd)
+                h = hashlib.sha256()
+                with open(tmp, "rb") as f:
+                    for chunk in iter(lambda: f.read(8 << 20), b""):
+                        h.update(chunk)
+                if h.hexdigest() != st["digest"]:
+                    raise IOError(f"{key}: gathered assembly digest mismatch")
+        except (OSError, LookupError):
+            return False  # the MRM's CLOUD fall-through re-fetches whole
+        # charge the gather at the links (and wire bytes) it actually used
+        gather_s = self.hw.gather_time(acct["loads"].values(),
+                                       acct["wire_bytes"])
+        timings.gather_s = gather_s
+        timings.tier_hit = "gather"
+        with self._metrics_lock:
+            self.metrics["gather_fetches"] += 1
+        with self.mrm._lock:
+            self.mrm.metrics["gather_fetches"] += 1
+            self.mrm.metrics["modeled_fetch_s"] += gather_s
+        self.directory.publish(self.name, key, Tier.DISK)
+        self._drop_local_shards(key)  # the full copy supersedes them
         return True
 
     def stats(self) -> dict:
@@ -366,16 +854,40 @@ class Cluster:
         self.nodes: Dict[str, ClusterNode] = {}
 
     def add_node(self, name: str, mrm: MRM, peer_fetch: bool = True,
-                 peer_codec: Optional[str] = None) -> ClusterNode:
+                 peer_codec: Optional[str] = None,
+                 gather: bool = True) -> ClusterNode:
         if mrm.objectstore is None and self.objectstore is not None:
             mrm.attach_objectstore(self.objectstore)
         node = ClusterNode(name, mrm, self.directory, peer_fetch=peer_fetch,
-                           peer_codec=peer_codec or self.peer_codec)
+                           peer_codec=peer_codec or self.peer_codec,
+                           gather=gather)
         self.nodes[name] = node
         return node
 
     def node(self, name: str) -> ClusterNode:
         return self.nodes[name]
+
+    def scatter(self, key: ModelKey,
+                node_names: Optional[List[str]] = None) -> Dict[str, List[int]]:
+        """Pre-position a sharded model across the fleet: shard ``i`` goes
+        to node ``i % n`` (round-robin), landing in each node's local
+        shard cache with a published placement. This is how a model larger
+        than any single node's device tier becomes cluster-resident
+        without any node holding it whole (§8). Returns
+        ``{node_name: [shard indices]}``."""
+        key = ModelKey(*key)
+        if self.objectstore is None:
+            raise RuntimeError("scatter needs a cluster object store")
+        names = list(node_names or self.nodes)
+        if not names:
+            raise RuntimeError("scatter needs at least one node")
+        out: Dict[str, List[int]] = {n: [] for n in names}
+        for s in self.objectstore.shard_table(key):
+            name = names[s["index"] % len(names)]
+            _, data = self.objectstore.fetch_shard(key, s["index"])
+            self.nodes[name].store_shard(key, s["index"], data)
+            out[name].append(s["index"])
+        return out
 
     def stats(self) -> dict:
         return {"directory": self.directory.stats(),

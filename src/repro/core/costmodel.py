@@ -27,6 +27,8 @@ PIPELINE_CHUNK_BYTES = 4 << 20  # default staging chunk (DESIGN.md §4)
 DECOMPRESS_BW = 1.5e9          # B/s single-stream inflate (zstd-class;
                                # zlib/lzma measure lower — bench_compression)
 COMPRESS_BW = 400e6            # B/s single-stream deflate (sender side)
+DEFAULT_SHARD_BYTES = 16 << 20  # default shard size for sharded manifests
+                                # (DESIGN.md §8)
 
 
 def pipelined_stage_time(stage_seconds, n_chunks: int,
@@ -61,6 +63,8 @@ class HardwareModel:
     cloud_rtt: float = 20e-3
     peer_bw: float = 10e9           # intra-cluster link (100GbE-class)
     peer_rtt: float = 0.5e-3
+    ingest_bw: float = 10e9         # local NIC/ingest ceiling a multi-source
+                                    # gather saturates at (DESIGN.md §8)
     decompress_bw: float = DECOMPRESS_BW  # single-stream inflate rate
     compress_bw: float = COMPRESS_BW      # single-stream deflate rate
 
@@ -117,6 +121,25 @@ class HardwareModel:
             [nbytes / src_bw, nbytes / self.compress_bw,
              nbytes / ratio / self.peer_bw, nbytes / self.decompress_bw],
             n, lat=self.peer_rtt)
+
+    def gather_time(self, per_source_seconds, wire_nbytes: int) -> float:
+        """Modeled seconds for a collective multi-source gather
+        (DESIGN.md §8): every source streams its assigned shards over its
+        own link *in parallel*, so the gather finishes with the slowest
+        source — but the parallel links share this node's ingest path, so
+        the aggregate can never beat ``wire_nbytes / ingest_bw``.
+
+        ``per_source_seconds`` are the modeled single-link seconds for the
+        bytes assigned to each source (``peer_fetch_time`` /
+        ``cloud_fetch_time`` over that source's share); ``wire_nbytes``
+        are the bytes that actually cross this node's ingest link —
+        shards served from a local cache are free and must be excluded by
+        the caller. An empty assignment costs nothing.
+        """
+        times = [t for t in per_source_seconds if t > 0.0]
+        if not times:
+            return 0.0
+        return max(max(times), wire_nbytes / self.ingest_bw)
 
     def pick_fetch_source(self, nbytes: int, have_peer: bool,
                           have_cloud: bool, peer_disk: bool = True,

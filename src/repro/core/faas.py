@@ -299,6 +299,23 @@ class FaaSPlatform:
         with self.mrm.device.lock:
             return list(self.mrm.device.entries.keys())
 
+    def residency(self, key: ModelKey) -> float:
+        """Graded residency score for routing (DESIGN.md §8): the
+        ``Tier.warmth`` rank of a full local copy, else — for sharded
+        models — the fraction of shard bytes held in this node's local
+        shard cache, weighted at DISK warmth. A node holding 60% of a
+        model's shards scores 0.6 against a full-disk node's 1.0 and an
+        empty node's 0.0, so the router steers a gather toward the node
+        that has the least left to fetch instead of treating residency as
+        a boolean."""
+        key = ModelKey(*key)
+        w = self.warmth(key)
+        if w > 0:
+            return float(w)
+        if self.cluster_node is None:
+            return 0.0
+        return Tier.DISK.warmth * self.cluster_node.shard_fraction(key)
+
     def warmth(self, key: ModelKey) -> int:
         """``Tier.warmth`` rank of the warmest tier holding ``key`` here:
         DEVICE=3, HOST=2, DISK=1, absent (CLOUD-only)=0. An entry whose
@@ -370,9 +387,11 @@ class Router:
 
     ``policy="affinity"`` (default) dispatches to the node holding the
     request's models at the warmest tier — a device-warm node beats a
-    host-warm node beats a disk-cold one — falling back to least-loaded on
-    ties, and issues prefetch hints to the chosen node so staging overlaps
-    dispatch. A request carrying ``deadline_s`` breaks affinity ties by
+    host-warm node beats a disk-cold one, and partial residency counts:
+    a node holding a fraction of a sharded model's bytes scores that
+    fraction of DISK warmth (``FaaSPlatform.residency``, DESIGN.md §8) —
+    falling back to least-loaded on ties, and issues prefetch hints to
+    the chosen node so staging overlaps dispatch. A request carrying ``deadline_s`` breaks affinity ties by
     *deadline slack* instead: among equally-warm nodes, the one whose
     modeled time-to-model-ready (``estimated_ready_s``) leaves the most
     slack before the deadline wins. ``policy="round_robin"`` is the
@@ -400,7 +419,11 @@ class Router:
             return candidates[next(self._rr) % len(candidates)]
 
         def score(node: FaaSPlatform):
-            affinity = sum(node.warmth(ModelKey(*k)) for k in needed_models)
+            # graded partial residency (§8), not boolean can-resolve: a
+            # node holding most of a sharded model's bytes outranks an
+            # empty one even though neither has a full copy
+            affinity = sum(node.residency(ModelKey(*k))
+                           for k in needed_models)
             if deadline_s is not None:
                 # slack = deadline - estimated_ready; the deadline is the
                 # same for every candidate, so ranking by smallest modeled

@@ -61,6 +61,8 @@ class OpenTimings:
                                   # (compression-aware: wire at stored bytes
                                   # + overlapped decompress stage)
     peer_s: float = 0.0           # modeled peer-to-peer fetch time (cluster)
+    gather_s: float = 0.0         # modeled multi-source shard gather time
+                                  # (parallel links, ingest-bw capped — §8)
     decompress_s: float = 0.0     # measured inflate busy s (cloud/peer fetch)
     disk_read_s: float = 0.0      # measured file -> host bytes
     deserialize_s: float = 0.0    # measured unmarshal -> arrays
@@ -76,8 +78,8 @@ class OpenTimings:
     staging_pipelined_modeled_s: float = 0.0
 
     def modeled_total(self) -> float:
-        return (self.cloud_s + self.peer_s + self.disk_read_s
-                + self.deserialize_s + self.h2d_modeled_s
+        return (self.cloud_s + self.peer_s + self.gather_s
+                + self.disk_read_s + self.deserialize_s + self.h2d_modeled_s
                 + self.share_overhead_s)
 
 
@@ -260,7 +262,7 @@ class MRM:
             "cloud_downloads": 0, "disk_loads": 0, "h2d_stages": 0,
             "bytes_from_disk": 0, "bytes_h2d": 0,
             "prefetches": 0, "pipelined_loads": 0,
-            "peer_fetches": 0, "cloud_writebacks": 0,
+            "peer_fetches": 0, "gather_fetches": 0, "cloud_writebacks": 0,
             "cloud_writeback_errors": 0,
             # modeled seconds of work this node performed — survives open
             # coalescing (a coalesced waiter's own timings show a zero-cost
@@ -410,7 +412,7 @@ class MRM:
             t = f.timings
             if f._exc is not None or t.tier_hit in ("", "device"):
                 return  # never reloaded (hit/coalesced/failed): no stall
-            stall = t.cloud_s + t.peer_s + (
+            stall = t.cloud_s + t.peer_s + t.gather_s + (
                 t.h2d_modeled_s if t.tier_hit == "host"
                 else t.staging_pipelined_modeled_s)
             with self._lock:
@@ -655,7 +657,9 @@ class MRM:
         if self.disk.contains(key):
             return
         if self.remote_fetch is not None and self.remote_fetch(key, timings):
-            timings.tier_hit = "peer"
+            if timings.tier_hit in ("", "disk"):
+                # the hook may claim a more specific hit ("gather", §8)
+                timings.tier_hit = "peer"
             return
         for store in (self.cloud, self.objectstore):
             if store is None or not store.contains(key):

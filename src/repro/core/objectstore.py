@@ -37,8 +37,8 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.core.codec import get_codec
-from repro.core.costmodel import (DECOMPRESS_BW, PIPELINE_CHUNK_BYTES,
-                                  pipelined_stage_time)
+from repro.core.costmodel import (DECOMPRESS_BW, DEFAULT_SHARD_BYTES,
+                                  PIPELINE_CHUNK_BYTES, pipelined_stage_time)
 from repro.core.pipeline import PipelineReport, run_pipeline
 from repro.core.store import DiskStore, atomic_dest_file, write_model
 
@@ -63,7 +63,8 @@ class ObjectStore:
     def __init__(self, root: str, bw: float = 1e9, rtt: float = 20e-3,
                  simulate_time: bool = False, codec: str = "none",
                  decompress_bw: float = DECOMPRESS_BW,
-                 chunk_bytes: int = PIPELINE_CHUNK_BYTES):
+                 chunk_bytes: int = PIPELINE_CHUNK_BYTES,
+                 shard_bytes: Optional[int] = None):
         self.root = root
         self.blob_dir = os.path.join(root, "blobs")
         self.manifest_path = os.path.join(root, "manifest.json")
@@ -75,6 +76,14 @@ class ObjectStore:
         self.codec = self._codec.name
         self.decompress_bw = decompress_bw
         self.chunk_bytes = chunk_bytes
+        # default shard size for writes (DESIGN.md §8): None keeps blobs
+        # whole; an int splits every put into content-addressed shard
+        # blobs so peers can gather a model from many sources in parallel
+        # (True means the costmodel's DEFAULT_SHARD_BYTES — and guards the
+        # bool-is-int footgun of literally 1-byte shards)
+        if shard_bytes is True:
+            shard_bytes = DEFAULT_SHARD_BYTES
+        self.shard_bytes = shard_bytes
         self._lock = threading.RLock()
         os.makedirs(self.blob_dir, exist_ok=True)
         self._manifest: Dict[str, dict] = {}
@@ -87,6 +96,7 @@ class ObjectStore:
         self.dedup_hits = 0
         self.bytes_fetched = 0       # logical (uncompressed) bytes delivered
         self.wire_bytes_fetched = 0  # stored bytes that crossed the wire
+        self.shard_fetches = 0       # individual shard downloads (gather path)
         self.gc_runs = 0
         self.gc_blobs_removed = 0
         self.gc_reclaimed_bytes = 0
@@ -119,8 +129,26 @@ class ObjectStore:
         return pipelined_stage_time([wire, nbytes / self.decompress_bw], n,
                                     lat=self.rtt)
 
+    def _store_blob_locked(self, digest: str, codec_obj, data: bytes) -> int:
+        """Write ``data`` (uncompressed) as the blob for ``digest`` through
+        ``codec_obj`` unless it already exists (dedup); returns the blob's
+        stored (on-disk) size. Caller holds the store lock."""
+        blob = self._blob_path(digest, codec_obj.name)
+        if os.path.exists(blob):
+            self.dedup_hits += 1
+        else:
+            with atomic_dest_file(blob, prefix=".put-") as (fd, _):
+                comp = codec_obj.compressor()
+                with os.fdopen(fd, "wb") as out:
+                    for off in range(0, len(data), self.chunk_bytes):
+                        out.write(comp.compress(data[off:off
+                                                     + self.chunk_bytes]))
+                    out.write(comp.flush())
+        return os.path.getsize(blob)
+
     # -- writes -------------------------------------------------------------
-    def put_file(self, key, path: str, codec: Optional[str] = None) -> str:
+    def put_file(self, key, path: str, codec: Optional[str] = None,
+                 shard_bytes: Optional[int] = None) -> str:
         """Upload a serialized ``.trims`` file; returns its content digest.
 
         The digest is of the *uncompressed* content; the blob is stored
@@ -128,15 +156,65 @@ class ObjectStore:
         already holds under that codec is not re-written (dedup) — only
         the manifest entry is. The modeled wire leg moves the compressed
         size.
+
+        ``shard_bytes`` (store default when None, ``0`` forces whole-blob)
+        splits the content into fixed-size **shards** (DESIGN.md §8), each
+        its own content-addressed blob, and records a per-shard table
+        ``shards: [{index, digest, nbytes, stored_nbytes, codec}]`` in the
+        manifest — the unit of the cluster's multi-source gather. The
+        top-level digest still addresses the whole uncompressed content,
+        so an assembled gather is verifiable end-to-end.
         """
         codec_obj = get_codec(codec) if codec is not None else self._codec
+        sb = self.shard_bytes if shard_bytes is None else (shard_bytes or None)
+        if sb is True:  # per-put True: same default as the constructor's
+            sb = DEFAULT_SHARD_BYTES
+        nbytes = os.path.getsize(path)
+        t0 = time.perf_counter()
+        if sb is not None:
+            # hash pass OUTSIDE the lock (mirrors the whole-blob path:
+            # readers must not block behind digesting a multi-GB model);
+            # blob writes stay under the lock so gc_blobs can never sweep
+            # a half-landed shard
+            h = hashlib.sha256()
+            slices: List[Tuple[int, str]] = []  # (nbytes, digest) per shard
+            with open(path, "rb") as f:
+                while True:
+                    data = f.read(sb)
+                    if not data and slices:
+                        break
+                    h.update(data)
+                    slices.append((len(data),
+                                   hashlib.sha256(data).hexdigest()))
+                    if len(data) < sb:
+                        break
+            digest = h.hexdigest()
+            shards: List[dict] = []
+            with self._lock:
+                self.puts += 1
+                with open(path, "rb") as f:
+                    for index, (snbytes, sdig) in enumerate(slices):
+                        data = f.read(snbytes)
+                        stored = self._store_blob_locked(sdig, codec_obj,
+                                                         data)
+                        shards.append({"index": index, "digest": sdig,
+                                       "nbytes": snbytes,
+                                       "stored_nbytes": stored,
+                                       "codec": codec_obj.name})
+                stored_nbytes = sum(s["stored_nbytes"] for s in shards)
+                self._manifest[_key_id(key)] = {
+                    "digest": digest, "nbytes": nbytes,
+                    "stored_nbytes": stored_nbytes, "codec": codec_obj.name,
+                    "shard_bytes": sb, "shards": shards}
+                self._save_manifest_locked()
+            self._throttle(self.rtt + stored_nbytes / self.bw,
+                           time.perf_counter() - t0)
+            return digest
         h = hashlib.sha256()
         with open(path, "rb") as f:
             for chunk in iter(lambda: f.read(8 << 20), b""):
                 h.update(chunk)
         digest = h.hexdigest()
-        nbytes = os.path.getsize(path)
-        t0 = time.perf_counter()
         with self._lock:
             self.puts += 1
             blob = self._blob_path(digest, codec_obj.name)
@@ -160,13 +238,15 @@ class ObjectStore:
         return digest
 
     def put(self, key, tensors: Dict[str, np.ndarray], meta=None,
-            codec: Optional[str] = None) -> str:
+            codec: Optional[str] = None,
+            shard_bytes: Optional[int] = None) -> str:
         """Serialize ``tensors`` to the .trims format and upload."""
         fd, tmp = tempfile.mkstemp(suffix=".trims", dir=self.root)
         os.close(fd)
         try:
             write_model(tmp, tensors, meta)
-            return self.put_file(key, tmp, codec=codec)
+            return self.put_file(key, tmp, codec=codec,
+                                 shard_bytes=shard_bytes)
         finally:
             try:
                 os.unlink(tmp)
@@ -192,9 +272,15 @@ class ObjectStore:
         concurrent delete+gc re-stats and retries rather than failing.
         """
         with self._lock:
-            live = {os.path.abspath(self._blob_path(
-                        e["digest"], e.get("codec", "none")))
-                    for e in self._manifest.values()}
+            live = set()
+            for e in self._manifest.values():
+                if e.get("shards"):  # sharded entry: the shard blobs are live
+                    for s in e["shards"]:
+                        live.add(os.path.abspath(self._blob_path(
+                            s["digest"], s.get("codec", "none"))))
+                else:
+                    live.add(os.path.abspath(self._blob_path(
+                        e["digest"], e.get("codec", "none"))))
             reclaimed = removed = 0
             for sub in sorted(os.listdir(self.blob_dir)):
                 d = os.path.join(self.blob_dir, sub)
@@ -229,12 +315,22 @@ class ObjectStore:
     def stat(self, key) -> Optional[dict]:
         """``{"digest", "nbytes", "stored_nbytes", "codec"}`` for ``key``,
         or None. Entries written before compression existed are surfaced
-        with ``codec="none"`` and ``stored_nbytes == nbytes``."""
+        with ``codec="none"`` and ``stored_nbytes == nbytes``. Sharded
+        entries (DESIGN.md §8) additionally carry ``shard_bytes`` and
+        ``shards: [{index, digest, nbytes, stored_nbytes, codec}]``."""
         with self._lock:
             e = self._manifest.get(_key_id(key))
             if e is None:
                 return None
             return {"stored_nbytes": e["nbytes"], "codec": "none", **e}
+
+    def shard_table(self, key) -> List[dict]:
+        """The per-shard manifest rows for ``key`` (empty for unsharded
+        entries); raises KeyError when the store does not hold the key."""
+        st = self.stat(key)
+        if st is None:
+            raise KeyError(f"{key} not in object store")
+        return list(st.get("shards") or [])
 
     def nbytes(self, key) -> int:
         st = self.stat(key)
@@ -246,12 +342,61 @@ class ObjectStore:
         """Modeled CLOUD-leg seconds for ``key`` at this store's link —
         compression-aware: the wire moves ``stored_nbytes`` and the
         decompress stage is overlapped. This is what fetch-source cost
-        compares should use (DESIGN.md §6)."""
+        compares should use (DESIGN.md §6). A sharded entry streams its
+        shards back-to-back over the one cloud link, so the aggregate
+        model is the same."""
         st = self.stat(key)
         if st is None:
             raise KeyError(f"{key} not in object store")
         return self._modeled_fetch(st["nbytes"], st["stored_nbytes"],
                                    st["codec"])
+
+    def modeled_shard_fetch_s(self, key, index: int) -> float:
+        """Modeled seconds to pull ONE shard of ``key`` over this store's
+        link — the per-shard term of a gather plan (DESIGN.md §8)."""
+        s = self.shard_table(key)[index]
+        return self._modeled_fetch(s["nbytes"], s["stored_nbytes"],
+                                   s.get("codec", "none"))
+
+    def fetch_shard(self, key, index: int) -> Tuple[float, bytes]:
+        """Download one shard of a sharded entry; returns
+        ``(modeled_seconds, uncompressed_bytes)``, digest-verified.
+
+        The gather path's CLOUD source: shards are small enough to hand
+        back in memory, and each call is charged at the shard's own
+        stored size over this store's link. Raises KeyError for unsharded
+        keys or an out-of-range index; a blob lost to a concurrent
+        delete+gc re-stats and retries exactly as :meth:`fetch` does.
+        """
+        t0 = time.perf_counter()
+        for attempt in (0, 1):
+            shards = self.shard_table(key)
+            if index >= len(shards):
+                raise KeyError(f"{key}: no shard {index} "
+                               f"({len(shards)} shards)")
+            s = shards[index]
+            try:
+                with open(self._blob_path(s["digest"],
+                                          s.get("codec", "none")),
+                          "rb") as f:
+                    raw = f.read()
+                break
+            except FileNotFoundError:
+                if attempt == 0:
+                    continue
+                raise
+        codec = s.get("codec", "none")
+        data = raw if codec == "none" else get_codec(codec).decompress(raw)
+        if hashlib.sha256(data).hexdigest() != s["digest"]:
+            raise IOError(f"{key} shard {index}: digest mismatch")
+        modeled = self._throttle(
+            self._modeled_fetch(s["nbytes"], s["stored_nbytes"], codec),
+            time.perf_counter() - t0)
+        with self._lock:
+            self.shard_fetches += 1
+            self.bytes_fetched += s["nbytes"]
+            self.wire_bytes_fetched += s["stored_nbytes"]
+        return modeled, data
 
     def _fetch_pipelined(self, src: str, out, codec_name: str
                          ) -> PipelineReport:
@@ -284,6 +429,37 @@ class ObjectStore:
         out.write(decomp.flush())
         return report
 
+    def _fetch_sharded(self, st: dict, out) -> PipelineReport:
+        """Reassemble a sharded entry into ``out``: shard blobs stream in
+        index order through one ``wire_read | decompress | disk_write``
+        pipeline, so decode and assembly overlap the wire exactly as the
+        whole-blob path does (DESIGN.md §8)."""
+
+        def wire_read(s):
+            with open(self._blob_path(s["digest"], s.get("codec", "none")),
+                      "rb") as f:
+                return s, f.read()
+
+        def decode(item):
+            s, raw = item
+            codec = s.get("codec", "none")
+            data = raw if codec == "none" else get_codec(codec).decompress(raw)
+            if hashlib.sha256(data).hexdigest() != s["digest"]:
+                raise IOError(f"shard {s['index']}: digest mismatch")
+            return data
+
+        def disk_write(data):
+            out.write(data)
+            return len(data)
+
+        _, report = run_pipeline(
+            list(st["shards"]),
+            [("wire_read", wire_read, lambda r: len(r[1])),
+             ("decompress", decode, len),
+             ("disk_write", disk_write)],
+            depth=2)
+        return report
+
     def fetch(self, key, dest: DiskStore,
               report_out: Optional[List] = None) -> Tuple[float, int]:
         """Download ``key`` into a local DiskStore.
@@ -312,7 +488,10 @@ class ObjectStore:
             src = self._blob_path(st["digest"], st["codec"])
             try:
                 with atomic_dest_file(dst, prefix=".fetch-") as (fd, tmp):
-                    if st["codec"] == "none":
+                    if st.get("shards"):
+                        with os.fdopen(fd, "wb") as out:
+                            report = self._fetch_sharded(st, out)
+                    elif st["codec"] == "none":
                         os.close(fd)
                         shutil.copyfile(src, tmp)
                     else:
@@ -347,13 +526,22 @@ class ObjectStore:
 
     def stats(self) -> dict:
         with self._lock:
-            blobs = {(e["digest"], e.get("codec", "none"))
-                     for e in self._manifest.values()}
+            blobs = set()
+            sharded_keys = 0
+            for e in self._manifest.values():
+                if e.get("shards"):
+                    sharded_keys += 1
+                    blobs |= {(s["digest"], s.get("codec", "none"))
+                              for s in e["shards"]}
+                else:
+                    blobs.add((e["digest"], e.get("codec", "none")))
             stored = sum(e.get("stored_nbytes", e["nbytes"])
                          for e in self._manifest.values())
             return {"keys": len(self._manifest), "blobs": len(blobs),
+                    "sharded_keys": sharded_keys,
                     "puts": self.puts, "dedup_hits": self.dedup_hits,
                     "fetches": self.fetches,
+                    "shard_fetches": self.shard_fetches,
                     "bytes_fetched": self.bytes_fetched,
                     "wire_bytes_fetched": self.wire_bytes_fetched,
                     "stored_bytes": stored,

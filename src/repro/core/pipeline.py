@@ -11,10 +11,13 @@ multi-tier staging needs to hide I/O behind PCIe transfers.
 
 The runner is deliberately generic (items in, per-stage callables, stats
 out) so the MRM uses one mechanism for disk->host, host->device, and the
-full three-stage cold path — and the compressed-transfer paths
+full three-stage cold path — the compressed-transfer paths
 (ObjectStore fetch, peer wire) use the same runner with a **decompress**
 stage in the chain, so decode overlaps the transfer instead of
-serializing after it (DESIGN.md §4).
+serializing after it (DESIGN.md §4), and the cluster's multi-source
+shard gather streams ``shard_fetch | assemble`` through it so shard
+N+1's fetch overlaps shard N's verification and placement into the
+assembled file (DESIGN.md §8).
 """
 from __future__ import annotations
 

@@ -1,0 +1,322 @@
+"""Property-based tests for the ClusterDirectory (DESIGN.md §6, §8).
+
+Invariants, driven over arbitrary interleavings of register / publish /
+withdraw / shard-placement / drop_node operations:
+
+  D1: the directory never lists a holder (whole-model or shard) that is
+      not a currently-registered node — hints never resurrect dropped
+      nodes, and every view the directory serves agrees with a reference
+      model replayed alongside it.
+  D2: ``generation`` is bumped by every drop_node and never by hints, so
+      in-flight source plans can re-validate.
+  D3: against a REAL cluster (MRMs, tier caches, shard caches), every
+      directory entry points at an actually-resident (key, shard, node,
+      tier) — across loads, demotions, evictions and node drops.
+
+The interleavings run twice over: hypothesis-driven when the package is
+installed, and a seeded ``random.Random`` driver that always runs (so the
+invariants stay enforced on minimal containers without adding a skip).
+"""
+import random
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import (CapacityError, Cluster, ClusterDirectory, DiskStore,
+                        HardwareModel, MRM, ModelKey, ObjectStore, Tier)
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised on minimal containers
+    HAVE_HYPOTHESIS = False
+
+KB = 1 << 10
+NAMES = [f"n{i}" for i in range(4)]
+KEYS = [ModelKey("jax", f"m{i}") for i in range(3)]
+TIERS = [Tier.DEVICE, Tier.HOST, Tier.DISK]
+OP_KINDS = ["register", "drop", "publish", "withdraw",
+            "publish_shard", "withdraw_shard"]
+
+
+class _FakeNode:
+    def __init__(self, name):
+        self.name = name
+        self.detached = 0
+
+    def detach(self):
+        self.detached += 1
+
+
+def _warmest(tiers):
+    return min(tiers, key=lambda t: t.value)
+
+
+def _apply_directory_ops(ops):
+    """Replay ``ops`` against a real ClusterDirectory and a reference
+    model side by side, asserting D1/D2 after every operation.
+
+    Each op is ``(kind, a, b, c)`` with the integers decoded modulo the
+    small name/key/tier spaces, so any integer tuple is a valid op.
+    """
+    d = ClusterDirectory()
+    alive = {}
+    placements = {}   # (key, name) -> set of tiers
+    shards = {}       # (key, index, name) -> set of tiers
+    gen = d.generation
+    for kind, a, b, c in ops:
+        name = NAMES[a % len(NAMES)]
+        key = KEYS[b % len(KEYS)]
+        tier = TIERS[c % len(TIERS)]
+        index = c % 4
+        if kind == "register":
+            if name in alive:
+                with pytest.raises(KeyError):
+                    d.register(_FakeNode(name))
+            else:
+                node = _FakeNode(name)
+                d.register(node)
+                alive[name] = node
+        elif kind == "drop":
+            node = alive.pop(name, None)
+            d.drop_node(name)
+            assert d.generation == gen + 1, "drop_node must bump generation"
+            gen = d.generation
+            if node is not None:
+                assert node.detached == 1
+            placements = {kn: t for kn, t in placements.items()
+                          if kn[1] != name}
+            shards = {kin: t for kin, t in shards.items() if kin[2] != name}
+        elif kind == "publish":
+            d.publish(name, key, tier)
+            if name in alive:  # hints for dead nodes must be ignored
+                placements.setdefault((key, name), set()).add(tier)
+        elif kind == "withdraw":
+            d.withdraw(name, key, tier)
+            tiers = placements.get((key, name))
+            if tiers is not None:
+                tiers.discard(tier)
+                if not tiers:
+                    del placements[(key, name)]
+        elif kind == "publish_shard":
+            d.publish_shard(name, key, index, tier)
+            if name in alive:
+                shards.setdefault((key, index, name), set()).add(tier)
+        elif kind == "withdraw_shard":
+            d.withdraw_shard(name, key, index, tier)
+            tiers = shards.get((key, index, name))
+            if tiers is not None:
+                tiers.discard(tier)
+                if not tiers:
+                    del shards[(key, index, name)]
+        assert d.generation == gen, "only drop_node moves the generation"
+        # D1: every view matches the reference model exactly
+        for k in KEYS:
+            expect = {n: _warmest(t) for (kk, n), t in placements.items()
+                      if kk == k and t}
+            got = dict(d.holders(k))
+            assert got == expect
+            assert set(got) <= set(alive)
+            for n in NAMES:
+                assert d.tier_on(k, n) == expect.get(n)
+            for i in range(4):
+                sexpect = {n: _warmest(t)
+                           for (kk, ii, n), t in shards.items()
+                           if kk == k and ii == i and t}
+                sgot = dict(d.shard_holders(k, i))
+                assert sgot == sexpect
+                assert set(sgot) <= set(alive)
+            for n in NAMES:
+                assert d.shards_on(k, n) == sorted(
+                    i for (kk, i, nn) in shards if kk == k and nn == n)
+
+
+def _random_ops(rng: random.Random, n: int):
+    return [(rng.choice(OP_KINDS), rng.randrange(8), rng.randrange(8),
+             rng.randrange(8)) for _ in range(n)]
+
+
+if HAVE_HYPOTHESIS:
+
+    @given(st.lists(st.tuples(st.sampled_from(OP_KINDS),
+                              st.integers(0, 7), st.integers(0, 7),
+                              st.integers(0, 7)),
+                    min_size=1, max_size=60))
+    @settings(max_examples=80, deadline=None)
+    def test_directory_interleavings_property(ops):
+        _apply_directory_ops(ops)
+
+
+@pytest.mark.parametrize("seed", range(12))
+def test_directory_interleavings_seeded(seed):
+    """The hypothesis property above, driven by a seeded generator so the
+    invariants run (deterministically) even without hypothesis."""
+    rng = random.Random(seed)
+    _apply_directory_ops(_random_ops(rng, 80))
+
+
+def test_generation_bumps_only_on_drop():
+    d = ClusterDirectory()
+    d.register(_FakeNode("n0"))
+    g0 = d.generation
+    d.publish("n0", KEYS[0], Tier.DISK)
+    d.publish_shard("n0", KEYS[0], 0, Tier.DISK)
+    d.withdraw("n0", KEYS[0], Tier.DISK)
+    assert d.generation == g0
+    d.drop_node("n0")
+    assert d.generation == g0 + 1
+    d.drop_node("ghost")  # unknown node still moves the epoch (cheap, safe)
+    assert d.generation == g0 + 2
+
+
+def test_withdraw_shard_all_tiers():
+    d = ClusterDirectory()
+    d.register(_FakeNode("n0"))
+    d.publish_shard("n0", KEYS[0], 1, Tier.DISK)
+    d.publish_shard("n0", KEYS[0], 1, Tier.HOST)
+    d.withdraw_shard("n0", KEYS[0], 1)  # tier=None clears every tier
+    assert d.shard_holders(KEYS[0], 1) == []
+    assert d.shards_on(KEYS[0], "n0") == []
+
+
+def test_concurrent_hints_and_drop_keep_invariants():
+    """Racing publishers against drop_node: whatever the interleaving,
+    dropped nodes end (and stay) absent from every view, and no
+    operation crashes. Non-deterministic scheduling is the point — the
+    invariant must hold for all of them."""
+    d = ClusterDirectory()
+    for name in NAMES:
+        d.register(_FakeNode(name))
+    stop = threading.Event()
+    errs = []
+
+    def publisher(name, seed):
+        rng = random.Random(seed)
+        while not stop.is_set():
+            key = KEYS[rng.randrange(len(KEYS))]
+            if rng.random() < 0.5:
+                d.publish(name, key, TIERS[rng.randrange(3)])
+            else:
+                d.publish_shard(name, key, rng.randrange(4),
+                                TIERS[rng.randrange(3)])
+
+    def guard(fn):
+        def run(*a):
+            try:
+                fn(*a)
+            except BaseException as e:  # noqa: BLE001
+                errs.append(e)
+        return run
+
+    threads = [threading.Thread(target=guard(publisher), args=(n, i))
+               for i, n in enumerate(NAMES)]
+    for t in threads:
+        t.start()
+    for name in NAMES[1:]:
+        d.drop_node(name)
+    stop.set()
+    for t in threads:
+        t.join(timeout=30)
+    assert not errs
+    for k in KEYS:
+        assert set(dict(d.holders(k))) <= {"n0"}
+        for i in range(4):
+            assert set(dict(d.shard_holders(k, i))) <= {"n0"}
+
+
+# ----------------------------------------------------- real-cluster residency
+def _check_residency(cluster, alive):
+    """D3: every directory entry points at an actually-resident
+    (key, shard, node, tier)."""
+    d = cluster.directory
+    for key in KEYS:
+        for name, _tier in d.holders(key):
+            assert name in alive
+            node = cluster.nodes[name]
+            warmest = d.tier_on(key, name)
+            if warmest == Tier.DEVICE:
+                assert node.mrm.device.peek(key) is not None
+            elif warmest == Tier.HOST:
+                assert node.mrm.host.peek(key) is not None
+            # every holder, whatever its warmest tier, has the disk copy
+            # (the cold chain lands models there first)
+            assert node.mrm.disk.contains(key)
+        for name in list(cluster.nodes):
+            node = cluster.nodes[name]
+            for idx in d.shards_on(key, name):
+                assert name in alive
+                assert node.has_shard(key, idx)
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_real_cluster_directory_residency_seeded(tmp_path, seed):
+    """Seeded interleavings of open/close/evict/demote/shard-scatter/drop
+    against real MRMs: after every step the directory only points at
+    residents (D3)."""
+    rng = random.Random(seed)
+    obj = ObjectStore(str(tmp_path / "cloud"), shard_bytes=16 * KB)
+    for i, key in enumerate(KEYS):
+        tensors = {f"w{j}": np.full((16 * KB // 4,), i * 8 + j, np.float32)
+                   for j in range(2)}
+        obj.put(key, tensors)
+    cluster = Cluster(objectstore=obj)
+    for i in range(3):
+        cluster.add_node(
+            f"node{i}",
+            MRM(DiskStore(str(tmp_path / f"disk{i}")),
+                device_capacity=80 * KB, host_capacity=160 * KB,
+                hw=HardwareModel()))
+    alive = set(cluster.nodes)
+    handles = []
+    dropped = False
+    for _ in range(30):
+        op = rng.choice(["open", "open", "close", "evict_dev", "evict_host",
+                         "shard", "drop"])
+        name = rng.choice(sorted(alive))
+        node = cluster.nodes[name]
+        key = KEYS[rng.randrange(len(KEYS))]
+        if op == "open":
+            try:
+                handles.append((name, node.mrm.open(key)))
+            except CapacityError:
+                pass  # every resident entry referenced — a legal outcome
+        elif op == "close" and handles:
+            hname, h = handles.pop(rng.randrange(len(handles)))
+            cluster.nodes[hname].mrm.close(h)
+        elif op == "evict_dev":
+            cache = node.mrm.device
+            with cache.lock:
+                e = cache.peek(key)
+                if e is not None and e.refcount == 0 and not e.pinned \
+                        and e.payload is not None:
+                    cache.remove(key)
+        elif op == "evict_host":
+            cache = node.mrm.host
+            with cache.lock:
+                e = cache.peek(key)
+                if e is not None and e.refcount == 0 and not e.pinned \
+                        and e.payload is not None:
+                    cache.remove(key)
+        elif op == "shard":
+            table = obj.shard_table(key)
+            s = table[rng.randrange(len(table))]
+            _, data = obj.fetch_shard(key, s["index"])
+            node.store_shard(key, s["index"], data)
+        elif op == "drop" and not dropped and len(alive) > 1:
+            dropped = True
+            victim = rng.choice(sorted(alive - {"node0"}))
+            # don't strand open handles on the dropped node
+            keep = []
+            for hname, h in handles:
+                if hname == victim:
+                    cluster.nodes[hname].mrm.close(h)
+                else:
+                    keep.append((hname, h))
+            handles = keep
+            cluster.directory.drop_node(victim)
+            alive.discard(victim)
+        _check_residency(cluster, alive)
+    for hname, h in handles:
+        cluster.nodes[hname].mrm.close(h)
+    _check_residency(cluster, alive)

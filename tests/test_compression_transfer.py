@@ -31,6 +31,12 @@ def _quantized(nbytes=2 * MB, n=4, seed=0):
                       ).astype(np.float32) for i in range(n)}
 
 
+def _incompressible(nbytes, seed=0) -> bytes:
+    """Deterministic stand-in for os.urandom: reproducible run-to-run
+    (seed audit), still incompressible."""
+    return np.random.default_rng(seed).bytes(nbytes)
+
+
 def _mrm(disk, **kw):
     kw.setdefault("device_capacity", 64 * MB)
     kw.setdefault("host_capacity", 128 * MB)
@@ -42,7 +48,7 @@ class TestCodec:
     @pytest.mark.parametrize("name", sorted(CODECS))
     def test_one_shot_round_trip(self, name):
         codec = get_codec(name)
-        data = os.urandom(64 << 10) + bytes(64 << 10)
+        data = _incompressible(64 << 10) + bytes(64 << 10)
         assert codec.decompress(codec.compress(data)) == data
 
     @pytest.mark.parametrize("name", ["zlib", "lzma"])
@@ -67,7 +73,7 @@ class TestCodec:
 
     def test_sample_ratio_clamps_incompressible(self, tmp_path):
         p = tmp_path / "rand.bin"
-        p.write_bytes(os.urandom(256 << 10))
+        p.write_bytes(_incompressible(256 << 10))
         assert sample_ratio(str(p), "zlib") == 1.0  # never inflates the model
         z = tmp_path / "zeros.bin"
         z.write_bytes(bytes(256 << 10))
@@ -291,7 +297,7 @@ class TestPipelineErrorPath:
         st = obj.stat(key)
         blob = obj._blob_path(st["digest"], st["codec"])
         with open(blob, "wb") as f:
-            f.write(os.urandom(st["stored_nbytes"]))
+            f.write(_incompressible(st["stored_nbytes"]))
         dest = DiskStore(str(tmp_path / "disk"))
         with pytest.raises(Exception):
             obj.fetch(key, dest)

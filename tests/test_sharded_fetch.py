@@ -1,0 +1,716 @@
+"""Sharded manifests + collective multi-source staging (DESIGN.md §8).
+
+Covers the ObjectStore shard table (put-side splitter, per-shard fetch,
+gc/dedup), the gather cost model, the ClusterNode gather path (scatter,
+multi-peer gather, partial residency routing), and the fault-injection
+regressions: corrupt/stale shard sources fall back to CLOUD without
+aborting the gather, concurrent gathers coalesce onto one set of shard
+fetches, and a node dropped mid-fetch is never charged as a live link
+(source plans re-validate against the directory generation).
+"""
+import hashlib
+import os
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import (Cluster, DiskStore, FaaSPlatform, HardwareModel,
+                        MRM, ModelKey, ObjectStore, Router, Tier)
+from repro.core.mrm import OpenTimings
+
+MB = 1 << 20
+SHARD = 256 << 10  # keep proxy files small; the decisive legs are modeled
+
+
+def _tensors(nbytes=2 * MB, n=8, seed=0):
+    rng = np.random.default_rng(seed)
+    per = nbytes // n // 4
+    return {f"w{i}": rng.standard_normal(per).astype(np.float32)
+            for i in range(n)}
+
+
+def _mrm(disk, dev=64 * MB, host=256 * MB, **kw):
+    return MRM(disk, device_capacity=dev, host_capacity=host,
+               hw=kw.pop("hw", HardwareModel()), **kw)
+
+
+@pytest.fixture
+def objstore(tmp_path):
+    return ObjectStore(str(tmp_path / "cloud"), shard_bytes=SHARD)
+
+
+def _cluster(tmp_path, objstore, n=3, populate=(), **mrm_kw):
+    for key, seed in populate:
+        objstore.put(key, _tensors(seed=seed))
+    cluster = Cluster(objectstore=objstore)
+    for i in range(n):
+        cluster.add_node(f"node{i}",
+                         _mrm(DiskStore(str(tmp_path / f"disk{i}")), **mrm_kw))
+    return cluster
+
+
+# --------------------------------------------------------- sharded ObjectStore
+class TestShardedObjectStore:
+    def test_put_records_shard_table(self, objstore):
+        key = ModelKey("jax", "m", "1")
+        objstore.put(key, _tensors())
+        st = objstore.stat(key)
+        shards = st["shards"]
+        assert st["shard_bytes"] == SHARD
+        assert len(shards) == -(-st["nbytes"] // SHARD)  # ceil division
+        assert [s["index"] for s in shards] == list(range(len(shards)))
+        assert sum(s["nbytes"] for s in shards) == st["nbytes"]
+        assert all(s["nbytes"] == SHARD for s in shards[:-1])
+
+    def test_whole_digest_addresses_uncompressed_content(self, tmp_path,
+                                                         objstore):
+        key = ModelKey("jax", "m", "1")
+        objstore.put(key, _tensors())
+        dest = DiskStore(str(tmp_path / "d"))
+        objstore.fetch(key, dest)
+        with open(dest.path_for(key), "rb") as f:
+            assert hashlib.sha256(f.read()).hexdigest() == \
+                objstore.stat(key)["digest"]
+
+    def test_fetch_reassembles_sharded_entry(self, tmp_path, objstore):
+        key = ModelKey("jax", "m", "1")
+        tensors = _tensors(seed=3)
+        objstore.put(key, tensors)
+        dest = DiskStore(str(tmp_path / "d"))
+        modeled, nbytes = objstore.fetch(key, dest)
+        assert modeled > 0 and nbytes == objstore.stat(key)["nbytes"]
+        got = dest.open(key).read_all(verify=True)
+        np.testing.assert_array_equal(got["w3"], tensors["w3"])
+
+    def test_sharded_compressed_roundtrip(self, tmp_path):
+        obj = ObjectStore(str(tmp_path / "cloud"), shard_bytes=SHARD,
+                          codec="zlib")
+        key = ModelKey("jax", "m", "1")
+        # compressible content: zeros
+        tensors = {"w": np.zeros(MB // 4, np.float32)}
+        obj.put(key, tensors)
+        st = obj.stat(key)
+        assert st["stored_nbytes"] < st["nbytes"]
+        assert all(s["codec"] == "zlib" for s in st["shards"])
+        dest = DiskStore(str(tmp_path / "d"))
+        obj.fetch(key, dest)
+        got = dest.open(key).read_all(verify=True)
+        np.testing.assert_array_equal(got["w"], tensors["w"])
+
+    def test_fetch_shard_verified_bytes(self, objstore):
+        key = ModelKey("jax", "m", "1")
+        objstore.put(key, _tensors(seed=1))
+        st = objstore.stat(key)
+        modeled, data = objstore.fetch_shard(key, 2)
+        s = st["shards"][2]
+        assert modeled > 0
+        assert len(data) == s["nbytes"]
+        assert hashlib.sha256(data).hexdigest() == s["digest"]
+        assert objstore.stats()["shard_fetches"] == 1
+
+    def test_fetch_shard_out_of_range_and_unsharded(self, objstore):
+        key = ModelKey("jax", "m", "1")
+        objstore.put(key, _tensors())
+        with pytest.raises(KeyError):
+            objstore.fetch_shard(key, 10_000)
+        unsharded = ModelKey("jax", "plain", "1")
+        objstore.put(unsharded, _tensors(seed=2), shard_bytes=0)
+        assert objstore.shard_table(unsharded) == []
+        with pytest.raises(KeyError):
+            objstore.fetch_shard(unsharded, 0)
+        with pytest.raises(KeyError):
+            objstore.shard_table(ModelKey("jax", "nope"))
+
+    def test_shard_dedup_across_versions(self, objstore):
+        tensors = _tensors(seed=7)
+        objstore.put(ModelKey("jax", "m", "1"), tensors)
+        before = objstore.stats()["blobs"]
+        objstore.put(ModelKey("jax", "m", "2"), tensors)
+        st = objstore.stats()
+        assert st["blobs"] == before  # every shard blob shared
+        assert st["dedup_hits"] == before
+        assert st["sharded_keys"] == 2
+
+    def test_gc_keeps_live_shard_blobs(self, objstore):
+        a, b = ModelKey("jax", "a"), ModelKey("jax", "b")
+        objstore.put(a, _tensors(seed=1))
+        objstore.put(b, _tensors(seed=2))
+        assert objstore.gc_blobs() == 0
+        objstore.delete(b)
+        reclaimed = objstore.gc_blobs()
+        assert reclaimed > 0
+        # a still fetchable after the sweep
+        assert objstore.contains(a)
+
+    def test_modeled_shard_fetch_consistent(self, objstore):
+        key = ModelKey("jax", "m", "1")
+        objstore.put(key, _tensors())
+        per_shard = sum(objstore.modeled_shard_fetch_s(key, s["index"])
+                        for s in objstore.shard_table(key))
+        whole = objstore.modeled_fetch_s(key)
+        # serial per-shard fetches pay the rtt once per shard; the whole
+        # fetch pays it once — per-shard can never be cheaper
+        assert per_shard >= whole
+
+    def test_shard_bytes_true_means_default(self, tmp_path):
+        """Regression: shard_bytes=True must mean DEFAULT_SHARD_BYTES on
+        the per-put path too — bool is an int, and literally 1-byte
+        shards would explode the blob dir."""
+        from repro.core.costmodel import DEFAULT_SHARD_BYTES
+        obj = ObjectStore(str(tmp_path / "cloud"), shard_bytes=True)
+        assert obj.shard_bytes == DEFAULT_SHARD_BYTES
+        key = ModelKey("jax", "m", "1")
+        obj.put(key, _tensors(), shard_bytes=True)
+        st = obj.stat(key)
+        assert st["shard_bytes"] == DEFAULT_SHARD_BYTES
+        assert len(st["shards"]) == 1  # 2 MiB model, 16 MiB shards
+
+    def test_manifest_persists_shards_across_instances(self, objstore):
+        key = ModelKey("jax", "m", "1")
+        objstore.put(key, _tensors())
+        reopened = ObjectStore(objstore.root)
+        st = reopened.stat(key)
+        assert len(st["shards"]) == len(objstore.shard_table(key))
+        _, data = reopened.fetch_shard(key, 0)
+        assert hashlib.sha256(data).hexdigest() == st["shards"][0]["digest"]
+
+
+# -------------------------------------------------------------- gather model
+class TestGatherCostModel:
+    def test_empty_gather_is_free(self):
+        assert HardwareModel().gather_time([], 0) == 0.0
+
+    def test_slowest_source_bounds_the_gather(self):
+        hw = HardwareModel(ingest_bw=1e12)
+        assert hw.gather_time([0.2, 0.5, 0.1], 1 * MB) == 0.5
+
+    def test_ingest_bandwidth_caps_parallel_links(self):
+        hw = HardwareModel(ingest_bw=1e9)
+        total = 1 << 30  # 1 GiB over 1 GB/s ingest >= 1.07s
+        t = hw.gather_time([0.01, 0.01, 0.01], total)
+        assert t == pytest.approx(total / 1e9)
+
+    def test_local_shards_not_charged_to_ingest(self, tmp_path):
+        """Regression: the ingest-bw floor must only charge bytes that
+        cross the NIC — a node holding most shards locally plans a gather
+        priced at the missing bytes, not the whole model."""
+        key = ModelKey("jax", "big", "1")
+        obj = ObjectStore(str(tmp_path / "cloud"), shard_bytes=SHARD)
+        obj.put(key, _tensors(seed=0))
+        # ingest so slow that charging the FULL model would dwarf every
+        # single-source option and wrongly kill the gather
+        hw = HardwareModel(ingest_bw=20e6)
+        cluster = Cluster(objectstore=obj)
+        for i in range(2):
+            cluster.add_node(f"node{i}",
+                             _mrm(DiskStore(str(tmp_path / f"d{i}")), hw=hw))
+        n_shards = len(obj.shard_table(key))
+        missing = n_shards - 1
+        for s in obj.shard_table(key)[:missing]:
+            _, data = obj.fetch_shard(key, s["index"])
+            cluster.node("node0").store_shard(key, s["index"], data)
+        _, data = obj.fetch_shard(key, n_shards - 1)
+        cluster.node("node1").store_shard(key, n_shards - 1, data)
+        n0 = cluster.node("node0")
+        st = obj.stat(key)
+        rows, modeled, _gen = n0.plan_shard_sources(key, st)
+        wire = sum(r["nbytes"] for r in rows if r["source"] != "local")
+        assert wire < st["nbytes"]
+        assert modeled < st["nbytes"] / hw.ingest_bw  # not the full floor
+        assert modeled >= wire / hw.ingest_bw
+
+    def test_gather_beats_single_source_with_parallel_peers(self):
+        """Three disk-capped peer links in parallel beat any one of them
+        and the cloud link — the §8 headline inequality on pure model."""
+        hw = HardwareModel()
+        nbytes = 64 * MB
+        single_peer = hw.peer_fetch_time(nbytes, peer_disk=True)
+        single_cloud = hw.cloud_fetch_time(nbytes)
+        per_source = [hw.peer_fetch_time(nbytes // 3, peer_disk=True)] * 3
+        gather = hw.gather_time(per_source, nbytes)
+        assert gather < min(single_peer, single_cloud)
+
+
+# -------------------------------------------------------- gather via cluster
+class TestGather:
+    def test_scatter_round_robins_shards(self, tmp_path, objstore):
+        key = ModelKey("jax", "big", "1")
+        cluster = _cluster(tmp_path, objstore, populate=[(key, 0)])
+        placement = cluster.scatter(key, node_names=["node1", "node2"])
+        n_shards = len(objstore.shard_table(key))
+        assert sorted(i for ids in placement.values() for i in ids) \
+            == list(range(n_shards))
+        n1 = cluster.node("node1")
+        assert n1.local_shards(key) == placement["node1"]
+        assert cluster.directory.shards_on(key, "node1") \
+            == placement["node1"]
+        assert 0 < n1.shard_fraction(key) < 1
+
+    def test_gather_from_scattered_peers(self, tmp_path, objstore):
+        key = ModelKey("jax", "big", "1")
+        tensors = _tensors(seed=0)
+        objstore.put(key, tensors)
+        cluster = _cluster(tmp_path, objstore, n=4)
+        cluster.scatter(key, node_names=["node1", "node2", "node3"])
+        n0 = cluster.node("node0")
+        h = n0.mrm.open(key)
+        assert h.timings.tier_hit == "gather"
+        assert 0 < h.timings.gather_s < objstore.modeled_fetch_s(key)
+        np.testing.assert_array_equal(np.asarray(h.weights["w0"]),
+                                      tensors["w0"])
+        stats = n0.stats()
+        assert stats["gather_fetches"] == 1
+        assert stats["shards_from_peers"] == len(objstore.shard_table(key))
+        assert stats["gather_fallbacks"] == 0
+        n0.mrm.close(h)
+
+    def test_gather_splits_across_full_file_holders(self, tmp_path, objstore):
+        """Two peers each holding the whole model: the plan balances the
+        shards across both links and beats either single link."""
+        key = ModelKey("jax", "big", "1")
+        cluster = _cluster(tmp_path, objstore, populate=[(key, 0)])
+        n0, n1, n2 = (cluster.node(f"node{i}") for i in range(3))
+        for peer in (n1, n2):
+            objstore.fetch(key, peer.mrm.disk)
+            cluster.directory.publish(peer.name, key, Tier.DISK)
+        h = n0.mrm.open(key)
+        assert h.timings.tier_hit == "gather"
+        assert h.timings.gather_s < n0.hw.peer_fetch_time(
+            objstore.nbytes(key), peer_disk=True)
+        assert n1.stats()["shard_serves"] > 0
+        assert n2.stats()["shard_serves"] > 0
+        n0.mrm.close(h)
+
+    def test_gather_declined_with_single_source(self, tmp_path, objstore):
+        """One full-file peer: shard-by-shard over the same single link
+        cannot beat the whole-file transfer — the plain peer path runs."""
+        key = ModelKey("jax", "big", "1")
+        cluster = _cluster(tmp_path, objstore, n=2, populate=[(key, 0)])
+        n0, n1 = cluster.node("node0"), cluster.node("node1")
+        objstore.fetch(key, n1.mrm.disk)
+        cluster.directory.publish("node1", key, Tier.DISK)
+        h = n0.mrm.open(key)
+        assert h.timings.tier_hit == "peer"
+        assert h.timings.gather_s == 0.0
+        assert n0.stats()["gather_fetches"] == 0
+        assert n0.stats()["peer_fetches"] == 1
+        n0.mrm.close(h)
+
+    def test_local_shards_are_free_sources(self, tmp_path, objstore):
+        """Shards already in the local cache are not re-fetched, and the
+        full assembled copy supersedes (and clears) the local shard
+        cache."""
+        key = ModelKey("jax", "big", "1")
+        objstore.put(key, _tensors(seed=0))
+        cluster = _cluster(tmp_path, objstore, n=3)
+        # node0 itself holds a third of the shards; node1/node2 the rest
+        cluster.scatter(key, node_names=["node0", "node1", "node2"])
+        n0 = cluster.node("node0")
+        mine = list(n0.local_shards(key))
+        assert mine
+        h = n0.mrm.open(key)
+        stats = n0.stats()
+        assert h.timings.tier_hit == "gather"
+        assert stats["shards_local"] == len(mine)
+        assert stats["shards_from_peers"] \
+            == len(objstore.shard_table(key)) - len(mine)
+        # full copy supersedes the shard cache
+        assert n0.local_shards(key) == []
+        assert cluster.directory.shards_on(key, "node0") == []
+        n0.mrm.close(h)
+
+    def test_gather_publishes_disk_and_warms(self, tmp_path, objstore):
+        key = ModelKey("jax", "big", "1")
+        objstore.put(key, _tensors(seed=0))
+        cluster = _cluster(tmp_path, objstore, n=3)
+        cluster.scatter(key, node_names=["node1", "node2"])
+        n0 = cluster.node("node0")
+        h = n0.mrm.open(key)
+        assert cluster.directory.tier_on(key, "node0") == Tier.DEVICE
+        assert n0.mrm.disk.contains(key)
+        h2 = n0.mrm.open(key)
+        assert h2.timings.tier_hit == "device"
+        assert n0.stats()["gather_fetches"] == 1
+        assert n0.mrm.metrics["gather_fetches"] == 1
+        assert n0.mrm.metrics["modeled_fetch_s"] > 0
+        n0.mrm.close(h)
+        n0.mrm.close(h2)
+
+    def test_gather_disabled_falls_back(self, tmp_path, objstore):
+        key = ModelKey("jax", "big", "1")
+        objstore.put(key, _tensors(seed=0))
+        cluster = Cluster(objectstore=objstore)
+        for i in range(3):
+            cluster.add_node(f"node{i}",
+                             _mrm(DiskStore(str(tmp_path / f"d{i}"))),
+                             gather=False)
+        cluster.scatter(key, node_names=["node1", "node2"])
+        n0 = cluster.node("node0")
+        h = n0.mrm.open(key)
+        # no gather: the scattered shards are unreachable as whole-model
+        # sources, so the open pays the CLOUD leg
+        assert h.timings.tier_hit == "cloud"
+        assert n0.stats()["gather_fetches"] == 0
+        n0.mrm.close(h)
+
+    def test_gather_without_peer_fetch_declines(self, tmp_path, objstore):
+        """peer_fetch=False leaves only the cloud link — a single-source
+        gather cannot beat the whole-file cloud fetch, so it declines."""
+        key = ModelKey("jax", "big", "1")
+        objstore.put(key, _tensors(seed=0))
+        cluster = Cluster(objectstore=objstore)
+        cluster.add_node("node0", _mrm(DiskStore(str(tmp_path / "d0"))),
+                         peer_fetch=False)
+        cluster.add_node("node1", _mrm(DiskStore(str(tmp_path / "d1"))))
+        cluster.scatter(key, node_names=["node1"])
+        n0 = cluster.node("node0")
+        h = n0.mrm.open(key)
+        assert h.timings.tier_hit == "cloud"
+        assert n0.stats()["gather_fetches"] == 0
+        n0.mrm.close(h)
+
+    def test_host_tier_gather_for_device_oversized_model(self, tmp_path,
+                                                         objstore):
+        """A model larger than the device tier still gathers: the open
+        lands it host-resident (the paper's large-model case)."""
+        key = ModelKey("jax", "big", "1")
+        tensors = _tensors(seed=0)  # 2 MiB model
+        objstore.put(key, tensors)
+        cluster = Cluster(objectstore=objstore)
+        for i in range(3):
+            cluster.add_node(
+                f"node{i}",
+                _mrm(DiskStore(str(tmp_path / f"d{i}")), dev=1 * MB))
+        cluster.scatter(key, node_names=["node1", "node2"])
+        n0 = cluster.node("node0")
+        h = n0.mrm.open(key, tier="host")
+        assert h.timings.tier_hit == "gather"
+        assert n0.mrm.resident(key, Tier.HOST)
+        np.testing.assert_array_equal(np.asarray(h.weights["w0"]),
+                                      tensors["w0"])
+        n0.mrm.close(h)
+
+
+# ------------------------------------------------------------ fault injection
+class TestGatherFaults:
+    def test_corrupt_peer_falls_back_to_cloud(self, tmp_path, objstore):
+        """A peer serving garbage fails the per-shard digest check; every
+        affected shard transparently re-sources from CLOUD and the
+        assembled file still verifies end-to-end."""
+        key = ModelKey("jax", "big", "1")
+        tensors = _tensors(seed=0)
+        objstore.put(key, tensors)
+        cluster = _cluster(tmp_path, objstore, n=3)
+        n0, n1, n2 = (cluster.node(f"node{i}") for i in range(3))
+        for peer in (n1, n2):
+            objstore.fetch(key, peer.mrm.disk)
+            cluster.directory.publish(peer.name, key, Tier.DISK)
+        # size-preserving corruption of node1's copy (hints stay "valid")
+        path = n1.mrm.disk.path_for(key)
+        size = os.path.getsize(path)
+        with open(path, "r+b") as f:
+            f.write(b"\xff" * size)
+        h = n0.mrm.open(key)
+        stats = n0.stats()
+        assert h.timings.tier_hit == "gather"
+        assert stats["gather_fallbacks"] > 0
+        assert stats["shards_from_cloud"] >= stats["gather_fallbacks"]
+        np.testing.assert_array_equal(np.asarray(h.weights["w0"]),
+                                      tensors["w0"])
+        with open(n0.mrm.disk.path_for(key), "rb") as f:
+            assert hashlib.sha256(f.read()).hexdigest() == \
+                objstore.stat(key)["digest"]
+        n0.mrm.close(h)
+
+    def test_corrupt_shard_cache_falls_back(self, tmp_path, objstore):
+        key = ModelKey("jax", "big", "1")
+        tensors = _tensors(seed=0)
+        objstore.put(key, tensors)
+        cluster = _cluster(tmp_path, objstore, n=3)
+        cluster.scatter(key, node_names=["node1", "node2"])
+        n1 = cluster.node("node1")
+        bad = n1.local_shards(key)[0]
+        with open(n1._shard_path(key, bad), "r+b") as f:
+            f.write(b"\x00" * 64)
+        n0 = cluster.node("node0")
+        h = n0.mrm.open(key)
+        assert h.timings.tier_hit == "gather"
+        assert n0.stats()["gather_fallbacks"] >= 1
+        assert n0.stats()["shards_from_cloud"] >= 1
+        np.testing.assert_array_equal(np.asarray(h.weights["w1"]),
+                                      tensors["w1"])
+        n0.mrm.close(h)
+
+    def test_corrupt_local_shard_evicted_from_cache(self, tmp_path,
+                                                    objstore):
+        """A corrupt local shard is not just skipped — its file and
+        directory hint are dropped, so neither this node nor any planning
+        peer keeps re-reading the bad copy."""
+        key = ModelKey("jax", "big", "1")
+        objstore.put(key, _tensors(seed=0))
+        cluster = _cluster(tmp_path, objstore, n=2)
+        n0 = cluster.node("node0")
+        cluster.scatter(key, node_names=["node0"])
+        bad = n0.local_shards(key)[0]
+        with open(n0._shard_path(key, bad), "r+b") as f:
+            f.write(b"\x00" * 64)
+        st = objstore.stat(key)
+        row = {"index": bad, "offset": bad * st["shard_bytes"],
+               "nbytes": st["shards"][bad]["nbytes"], "source": "local",
+               "node": None, "modeled_s": 0.0}
+        acct = {"loads": {}, "wire_bytes": 0}
+        data = n0._fetch_one_shard(key, st, row,
+                                   cluster.directory.generation, acct)
+        assert hashlib.sha256(data).hexdigest() == \
+            st["shards"][bad]["digest"]          # CLOUD supplied it
+        assert not n0.has_shard(key, bad)        # bad copy unlinked
+        assert bad not in cluster.directory.shards_on(key, "node0")
+        assert acct["wire_bytes"] == st["shards"][bad]["nbytes"]
+        assert n0.shard_fraction(key) < 1.0      # cache invalidated too
+
+    def test_peer_dies_mid_gather(self, tmp_path, objstore, monkeypatch):
+        """A peer dropped after the plan was made: the remaining shards
+        planned onto it re-validate against the directory generation,
+        re-plan onto CLOUD, and the assembly completes with the correct
+        digest — without charging the dead link."""
+        key = ModelKey("jax", "big", "1")
+        tensors = _tensors(seed=0)
+        objstore.put(key, tensors)
+        cluster = _cluster(tmp_path, objstore, n=3)
+        n0, n1, n2 = (cluster.node(f"node{i}") for i in range(3))
+        for peer in (n1, n2):
+            objstore.fetch(key, peer.mrm.disk)
+            cluster.directory.publish(peer.name, key, Tier.DISK)
+        real = n0._fetch_one_shard
+        state = {"fetched": 0}
+
+        def dying_fetch(k, st, row, plan_gen, loads):
+            data = real(k, st, row, plan_gen, loads)
+            state["fetched"] += 1
+            if state["fetched"] == 1:
+                cluster.directory.drop_node("node2")
+            return data
+
+        monkeypatch.setattr(n0, "_fetch_one_shard", dying_fetch)
+        h = n0.mrm.open(key)
+        stats = n0.stats()
+        assert h.timings.tier_hit == "gather"
+        assert stats["plan_replans"] >= 1       # dead link never charged
+        assert stats["shards_from_cloud"] >= 1  # re-planned onto CLOUD
+        np.testing.assert_array_equal(np.asarray(h.weights["w0"]),
+                                      tensors["w0"])
+        with open(n0.mrm.disk.path_for(key), "rb") as f:
+            assert hashlib.sha256(f.read()).hexdigest() == \
+                objstore.stat(key)["digest"]
+        n0.mrm.close(h)
+
+    def test_concurrent_gathers_coalesce(self, tmp_path, objstore,
+                                         monkeypatch):
+        """Two racing gathers of one key share one set of shard fetches
+        (PR 3/PR 4 race-regression style: the second caller blocks on the
+        first's in-flight gather instead of re-downloading)."""
+        key = ModelKey("jax", "big", "1")
+        objstore.put(key, _tensors(seed=0))
+        cluster = _cluster(tmp_path, objstore, n=3)
+        cluster.scatter(key, node_names=["node1", "node2"])
+        n0 = cluster.node("node0")
+        started = threading.Event()
+        real = n0._fetch_one_shard
+
+        def slow_fetch(*a, **kw):
+            started.set()
+            return real(*a, **kw)
+
+        monkeypatch.setattr(n0, "_fetch_one_shard", slow_fetch)
+        results = {}
+
+        def gather(tag):
+            t = OpenTimings()
+            results[tag] = (n0.fetch_for(key, t), t)
+
+        t1 = threading.Thread(target=gather, args=("a",))
+        t1.start()
+        started.wait(timeout=30)  # the primary is inside its gather now
+        t2 = threading.Thread(target=gather, args=("b",))
+        t2.start()
+        t1.join(timeout=30)
+        t2.join(timeout=30)
+        assert results["a"][0] and results["b"][0]
+        stats = n0.stats()
+        assert stats["gather_fetches"] == 1
+        assert stats["gather_coalesced"] == 1
+        n_shards = len(objstore.shard_table(key))
+        assert stats["shards_from_peers"] + stats["shards_from_cloud"] \
+            + stats["shards_local"] == n_shards
+
+    def test_concurrent_opens_share_one_gather(self, tmp_path, objstore):
+        """MRM-level coalescing already dedups opens; the gather beneath
+        them runs once (no duplicated shard downloads)."""
+        key = ModelKey("jax", "big", "1")
+        tensors = _tensors(seed=0)
+        objstore.put(key, tensors)
+        cluster = _cluster(tmp_path, objstore, n=3)
+        cluster.scatter(key, node_names=["node1", "node2"])
+        n0 = cluster.node("node0")
+        handles = [None] * 8
+        errs = []
+
+        def worker(i):
+            try:
+                handles[i] = n0.mrm.open(key)
+            except BaseException as e:  # noqa: BLE001
+                errs.append(e)
+
+        threads = [threading.Thread(target=worker, args=(i,))
+                   for i in range(len(handles))]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=60)
+        assert not errs
+        assert n0.stats()["gather_fetches"] == 1
+        assert n0.mrm.metrics["disk_loads"] == 1
+        for h in handles:
+            np.testing.assert_array_equal(np.asarray(h.weights["w0"]),
+                                          tensors["w0"])
+            n0.mrm.close(h)
+
+
+# --------------------------------------- drop_node mid-fetch (ride-along fix)
+class TestDropNodeMidFetchRegression:
+    def test_single_source_replan_on_drop(self, tmp_path, objstore,
+                                          monkeypatch):
+        """Regression: drop_node during an in-flight peer fetch used to
+        leave the fetcher charging the dead link. The plan now snapshots
+        the directory generation and re-validates after the transfer —
+        a vanished peer is never charged and the fetch re-plans (CLOUD
+        here, since no other peer holds the model)."""
+        key = ModelKey("jax", "m", "1")
+        objstore.put(key, _tensors(seed=0), shard_bytes=0)  # unsharded
+        cluster = _cluster(tmp_path, objstore, n=2)
+        n0, n1 = cluster.node("node0"), cluster.node("node1")
+        n1.mrm.close(n1.mrm.open(key))
+        import repro.core.cluster as cluster_mod
+        real_copy = cluster_mod.shutil.copyfile
+
+        def drop_mid_copy(src, dst):
+            out = real_copy(src, dst)
+            cluster.directory.drop_node("node1")
+            return out
+
+        monkeypatch.setattr(cluster_mod.shutil, "copyfile", drop_mid_copy)
+        h = n0.mrm.open(key)
+        assert h.timings.tier_hit == "cloud"
+        assert h.timings.peer_s == 0.0          # dead link never charged
+        assert n0.stats()["peer_fetches"] == 0
+        assert n0.stats()["plan_replans"] == 1
+        assert n0.mrm.metrics["cloud_downloads"] == 1
+        n0.mrm.close(h)
+
+    def test_peer_copy_vanishing_mid_transfer_replans(self, tmp_path,
+                                                      objstore, monkeypatch):
+        """A peer file deleted between planning and the copy is a stale
+        hint, not an error: the fetch re-plans and falls through to
+        CLOUD."""
+        key = ModelKey("jax", "m", "1")
+        objstore.put(key, _tensors(seed=0), shard_bytes=0)
+        cluster = _cluster(tmp_path, objstore, n=2)
+        n0, n1 = cluster.node("node0"), cluster.node("node1")
+        n1.mrm.close(n1.mrm.open(key))
+        import repro.core.cluster as cluster_mod
+        real_copy = cluster_mod.shutil.copyfile
+        peer_path = n1.mrm.disk.path_for(key)
+
+        def vanish(src, dst):
+            if src != peer_path:  # shutil is shared — only fault the peer leg
+                return real_copy(src, dst)
+            os.unlink(src)
+            raise FileNotFoundError(src)
+
+        monkeypatch.setattr(cluster_mod.shutil, "copyfile", vanish)
+        h = n0.mrm.open(key)
+        assert h.timings.tier_hit == "cloud"
+        assert n0.stats()["peer_fetches"] == 0
+        n0.mrm.close(h)
+
+    def test_publish_after_drop_is_ignored(self, tmp_path, objstore):
+        """Hints never resurrect a dropped node — whole-model or shard."""
+        key = ModelKey("jax", "m", "1")
+        cluster = _cluster(tmp_path, objstore, n=2, populate=[(key, 0)])
+        cluster.directory.drop_node("node1")
+        gen = cluster.directory.generation
+        cluster.directory.publish("node1", key, Tier.DISK)
+        cluster.directory.publish_shard("node1", key, 0, Tier.DISK)
+        assert cluster.directory.holders(key) == []
+        assert cluster.directory.shard_holders(key, 0) == []
+        assert cluster.directory.generation == gen
+
+
+# --------------------------------------------------- partial residency routing
+class TestPartialResidencyRouting:
+    def _platforms(self, cluster):
+        nodes = []
+        for name, cn in cluster.nodes.items():
+            p = FaaSPlatform(cn.mrm, name=name, cluster_node=cn)
+            p.deploy("f", lambda ctx, pl: ctx.load_model(*pl).nbytes,
+                     prewarm=False)
+            nodes.append(p)
+        return nodes
+
+    def test_residency_grades(self, tmp_path, objstore):
+        key = ModelKey("jax", "big", "1")
+        objstore.put(key, _tensors(seed=0))
+        cluster = _cluster(tmp_path, objstore, n=3)
+        cluster.scatter(key, node_names=["node1"])
+        platforms = {p.name: p for p in self._platforms(cluster)}
+        assert platforms["node0"].residency(key) == 0.0
+        # node1 holds every shard but no assembled copy: DISK-weighted 1.0
+        assert platforms["node1"].residency(key) == pytest.approx(
+            Tier.DISK.warmth)
+        objstore.fetch(key, cluster.node("node2").mrm.disk)
+        assert platforms["node2"].residency(key) == Tier.DISK.warmth
+        h = cluster.node("node2").mrm.open(key)
+        assert platforms["node2"].residency(key) == Tier.DEVICE.warmth
+        cluster.node("node2").mrm.close(h)
+
+    def test_router_prefers_partial_holder(self, tmp_path, objstore):
+        """No node holds the model whole; the router steers to the node
+        with the largest fraction of shard bytes instead of treating all
+        of them as equally cold."""
+        key = ModelKey("jax", "big", "1")
+        objstore.put(key, _tensors(seed=0))
+        cluster = _cluster(tmp_path, objstore, n=3)
+        n_shards = len(objstore.shard_table(key))
+        most = list(range(n_shards - 1))
+        for i in most:
+            _, data = objstore.fetch_shard(key, i)
+            cluster.node("node1").store_shard(key, i, data)
+        _, data = objstore.fetch_shard(key, n_shards - 1)
+        cluster.node("node2").store_shard(key, n_shards - 1, data)
+        platforms = self._platforms(cluster)
+        router = Router(platforms)
+        chosen = router.route("f", [key])
+        assert chosen.name == "node1"
+
+    def test_full_copy_outranks_partial(self, tmp_path, objstore):
+        key = ModelKey("jax", "big", "1")
+        objstore.put(key, _tensors(seed=0))
+        cluster = _cluster(tmp_path, objstore, n=3)
+        cluster.scatter(key, node_names=["node1"])       # all shards
+        objstore.fetch(key, cluster.node("node2").mrm.disk)  # full copy
+        platforms = self._platforms(cluster)
+        router = Router(platforms)
+        # full-disk 1.0 ties shard-complete 1.0 — warm node2 to break it
+        cluster.node("node2").mrm.close(cluster.node("node2").mrm.open(key))
+        assert router.route("f", [key]).name == "node2"
+
+    def test_warmth_unchanged_for_unsharded(self, tmp_path, objstore):
+        key = ModelKey("jax", "m", "1")
+        objstore.put(key, _tensors(seed=0), shard_bytes=0)
+        cluster = _cluster(tmp_path, objstore, n=2)
+        platforms = self._platforms(cluster)
+        assert platforms[0].residency(key) == 0.0
+        h = cluster.node("node0").mrm.open(key)
+        assert platforms[0].residency(key) == Tier.DEVICE.warmth
+        cluster.node("node0").mrm.close(h)
