@@ -102,6 +102,17 @@ def main() -> None:
                 f"{s_cell['violation_rate']:.1%};"
                 f"mispred={s_cell['mispredicted_evictions']}"))
 
+    print("== streaming: layer-granular TTFT vs reassemble-then-run ==",
+          flush=True)
+    from benchmarks import bench_streaming
+    rows_st, mech_st = bench_streaming.run(smoke=not args.full, verbose=True)
+    slow = max((r for r in rows_st if r["wire_bw"] ==
+                bench_streaming.SLOW_LINK_BW), key=lambda r: r["depth"])
+    out.append(("streaming_ttfl", 1e6 * slow["ttfl_s"],
+                f"slow_link_speedup={slow['speedup']:.2f}x;"
+                f"wire_dom_cells={sum(1 for r in rows_st if r['wire_dominated'])};"
+                f"identical={all(m['identical'] for m in mech_st)}"))
+
     print("== compression: codec x ratio x link bw ==", flush=True)
     from benchmarks import bench_compression
     rows_z = bench_compression.run(smoke=not args.full, verbose=True)

@@ -33,6 +33,9 @@ REQUIRED_CONTENT = [
     ("DESIGN.md", "Sharded placement & collective staging"),
     ("DESIGN.md", "gather_time"),
     ("DESIGN.md", "Partial-residency routing"),
+    ("DESIGN.md", "Layer-granular streaming staging"),
+    ("DESIGN.md", "streaming_ttfl_time"),
+    ("DESIGN.md", "wait_prefix"),
     (os.path.join("docs", "API.md"), "ClusterDirectory"),
     (os.path.join("docs", "API.md"), "shard_bytes"),
     (os.path.join("docs", "API.md"), "fetch_shard"),
@@ -47,6 +50,11 @@ REQUIRED_CONTENT = [
     (os.path.join("docs", "API.md"), "NextUsePredictor"),
     (os.path.join("docs", "API.md"), "deadline_s"),
     (os.path.join("docs", "API.md"), "LatencyStats"),
+    (os.path.join("docs", "API.md"), "open_stream"),
+    (os.path.join("docs", "API.md"), "shard_plan"),
+    (os.path.join("docs", "API.md"), "streaming_ttfl_time"),
+    (os.path.join("docs", "API.md"), "StreamAssembler"),
+    ("README.md", "bench_streaming"),
 ]
 
 LINK_RE = re.compile(r"(?<!\!)\[[^\]]+\]\(([^)\s]+)\)")

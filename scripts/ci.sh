@@ -31,12 +31,20 @@ if [[ "${1:-}" == "--fast" ]]; then
     # of a device-oversized model must beat the best single-source fetch
     # in every shard-size x node-count cell (asserted inside the benchmark)
     python -m benchmarks.bench_cluster --sharded --smoke
+    # layer-granular streaming (DESIGN.md §9): streamed TTFT must win every
+    # wire-dominated cell of the modeled sweep (>= 1.5x at the slow-link
+    # corner) and streamed generate() must match the batch path byte for
+    # byte (asserted inside the benchmark)
+    python -m benchmarks.bench_streaming --smoke
 else
     # coverage gate for the paper-core package (full mode only): enforced
     # whenever pytest-cov is importable; the floor tracks the suite, so
     # new core/ code without tests fails the full gate
     if python -c "import pytest_cov" 2>/dev/null; then
-        ARGS+=(--cov=repro.core --cov-fail-under=70)
+        # --cov=repro.core already spans layerplan; name the streaming
+        # module explicitly so a future package split keeps it gated
+        ARGS+=(--cov=repro.core --cov=repro.core.layerplan
+               --cov-fail-under=70)
     else
         echo "ci.sh: pytest-cov not installed - skipping the coverage gate"
     fi

@@ -14,9 +14,12 @@ from repro.core.client import (  # noqa: F401
 from repro.core.cluster import Cluster, ClusterDirectory, ClusterNode  # noqa: F401
 from repro.core.codec import CODECS, Codec, get_codec, sample_ratio  # noqa: F401
 from repro.core.costmodel import (  # noqa: F401
-    HardwareModel, get_hardware, pipelined_stage_time,
+    HardwareModel, get_hardware, pipelined_stage_time, streaming_ttfl_time,
 )
 from repro.core.faas import Container, FaaSPlatform, IsolationError, Router  # noqa: F401
+from repro.core.layerplan import (  # noqa: F401
+    LayerWindow, StreamAssembler, build_layer_plan, plan_for_file,
+)
 from repro.core.objectstore import ObjectStore  # noqa: F401
 from repro.core.mrm import (  # noqa: F401
     LoadFuture, MRM, ModelHandle, ModelKey, OpenTimings,

@@ -32,6 +32,7 @@ from typing import Dict, List, Optional, Set, Tuple
 from repro.core.cache import Tier
 from repro.core.codec import get_codec, sample_ratio
 from repro.core.mrm import MRM, ModelKey
+from repro.core.objectstore import shard_ranges
 from repro.core.pipeline import PipelineReport, run_pipeline
 from repro.core.store import atomic_dest_file
 
@@ -545,7 +546,7 @@ class ClusterNode:
         self.directory.publish(self.name, key, Tier.DISK)
         return True
 
-    def fetch_for(self, key: ModelKey, timings) -> bool:
+    def fetch_for(self, key: ModelKey, timings, on_shard=None) -> bool:
         """MRM ``remote_fetch`` hook: resolve a DISK miss from the cheapest
         source. Returns True when the model was pulled from the cluster (a
         peer, or a §8 multi-source gather); False hands the miss back to
@@ -554,13 +555,20 @@ class ClusterNode:
         compare are compression-aware: the peer leg at the estimated wire
         ratio, the cloud leg at the blob's real stored size (DESIGN.md §6).
         Source plans re-validate against the directory generation and
-        re-plan when the membership changed under them."""
+        re-plan when the membership changed under them.
+
+        ``on_shard(row, data)`` (streaming opens, DESIGN.md §9) fires per
+        digest-verified shard as the gather assembles it, in plan order —
+        layer-planned shards therefore announce readiness in execution
+        order. Whole-file pulls (peer copy, coalesced gather) fire no
+        callbacks; the caller streams from local disk once landed."""
         key = ModelKey(*key)
         obj = self.mrm.objectstore
         if (self.gather_enabled and obj is not None
                 and hasattr(obj, "stat")):
             st = obj.stat(key)
-            if st and st.get("shards") and self._gather(key, st, timings):
+            if st and st.get("shards") and self._gather(key, st, timings,
+                                                        on_shard):
                 return True
         for _ in range(3):  # bounded re-plans on directory-epoch changes
             # snapshot the epoch BEFORE scanning holders: a node dropped
@@ -597,11 +605,19 @@ class ClusterNode:
 
         Returns ``(rows, modeled_gather_s, plan_generation)`` or None when
         no source can supply some shard. Each row is ``{index, offset,
-        nbytes, source: "local"|"peer"|"cloud", node, modeled_s}``.
+        nbytes, ranges, source: "local"|"peer"|"cloud", node, modeled_s}``.
+
+        Layer-planned tables (``shard_plan="layers"``, DESIGN.md §9) are
+        walked in **execution order** — window by window, largest shard
+        first inside each window (LPT) — so the greedy assignment balances
+        within a layer window and the fetch pipeline delivers readiness in
+        the order the engine consumes layers. Classic fixed-size tables
+        keep their index order (window defaults to the shard index).
         """
-        shards = st["shards"]
-        shard_bytes = st.get("shard_bytes") or (shards[0]["nbytes"]
-                                                if shards else 0)
+        shards = sorted(
+            st["shards"],
+            key=lambda s: (s.get("window", s["index"]), -s["nbytes"],
+                           s["index"]))
         gen = self.directory.generation
         obj = self.mrm.objectstore
         cloud_ok = obj is not None and obj.contains(key)
@@ -643,10 +659,11 @@ class ClusterNode:
             load[sid] = load.get(sid, 0.0) + t
             if kind != "local":
                 wire_bytes += s["nbytes"]
-            rows.append({"index": s["index"],
-                         "offset": s["index"] * shard_bytes,
-                         "nbytes": s["nbytes"], "source": kind,
-                         "node": node, "modeled_s": t})
+            ranges = shard_ranges(st, s)
+            rows.append({"index": s["index"], "offset": ranges[0][0],
+                         "nbytes": s["nbytes"], "ranges": ranges,
+                         "layer_index": s.get("layer_index"),
+                         "source": kind, "node": node, "modeled_s": t})
         modeled = self.hw.gather_time(load.values(), wire_bytes)
         return rows, modeled, gen
 
@@ -657,11 +674,13 @@ class ClusterNode:
         corruption; the gather falls back to CLOUD."""
         if peer is None:
             raise _StaleSourceError("peer left the cluster")
-        shard_bytes = st.get("shard_bytes") or srow["nbytes"]
         if peer.mrm.disk.contains(key):
+            parts = []
             with open(peer.mrm.disk.path_for(key), "rb") as f:
-                f.seek(srow["index"] * shard_bytes)
-                data = f.read(srow["nbytes"])
+                for ro, rn in shard_ranges(st, srow):
+                    f.seek(ro)
+                    parts.append(f.read(rn))
+            data = b"".join(parts)
         elif peer.has_shard(key, srow["index"]):
             with open(peer._shard_path(key, srow["index"]), "rb") as f:
                 data = f.read()
@@ -738,7 +757,8 @@ class ClusterNode:
         acct["wire_bytes"] += srow["nbytes"]
         return data
 
-    def _gather(self, key: ModelKey, st: dict, timings) -> bool:
+    def _gather(self, key: ModelKey, st: dict, timings,
+                on_shard=None) -> bool:
         """Multi-source collective staging (§8): assemble ``key`` on local
         disk from its shard table, pulling from several sources in
         parallel. Returns False when a single source is modeled cheaper
@@ -763,14 +783,15 @@ class ClusterNode:
                 return True
             return False
         try:
-            ev.ok = self._gather_run(key, st, timings)
+            ev.ok = self._gather_run(key, st, timings, on_shard)
         finally:
             with self._gather_lock:
                 del self._gather_inflight[key]
             ev.set()
         return ev.ok
 
-    def _gather_run(self, key: ModelKey, st: dict, timings) -> bool:
+    def _gather_run(self, key: ModelKey, st: dict, timings,
+                    on_shard=None) -> bool:
         plan = self.plan_shard_sources(key, st)
         if plan is None:
             return False
@@ -801,7 +822,16 @@ class ClusterNode:
 
                     def assemble(item):
                         row, data = item
-                        os.pwrite(fd, data, row["offset"])
+                        off = 0
+                        for ro, rn in (row.get("ranges")
+                                       or [(row["offset"], row["nbytes"])]):
+                            os.pwrite(fd, data[off:off + rn], ro)
+                            off += rn
+                        # shard bytes are digest-verified by the fetch leg;
+                        # rows arrive in plan (= execution) order, so this
+                        # is the per-layer readiness feed (DESIGN.md §9)
+                        if on_shard is not None:
+                            on_shard(row, data)
                         return len(data)
 
                     run_pipeline(rows,

@@ -46,6 +46,33 @@ def pipelined_stage_time(stage_seconds, n_chunks: int,
     return lat + sum(per) + (n - 1) * max(per)
 
 
+def streaming_ttfl_time(wire_seconds, post_seconds, lat: float = 0.0):
+    """Layer-streamed overlap model (DESIGN.md §9).
+
+    ``wire_seconds[i]`` is the transfer time of layer window ``i`` (windows
+    arrive in execution order, back to back on one link); ``post_seconds[i]``
+    is everything serialized *after* its bytes land — deserialize + H2D +
+    that window's compute. Compute for window ``i`` starts at
+    ``max(done[i-1], arrival[i])``: the engine blocks per layer only when it
+    catches up to the wire, so each window costs ``max(wire, compute)``
+    rather than their sum.
+
+    Returns ``(ttfl, done)``: time-to-first-layer (the stem+layer-0 window,
+    when prefill can start emitting) and the list of per-window completion
+    times — ``done[-1]`` is the streamed total, to compare against the
+    reassemble-then-run baseline ``lat + sum(wire) + sum(post)``.
+    """
+    t_arrive = lat
+    t_done = 0.0
+    done = []
+    for w, p in zip(wire_seconds, post_seconds):
+        t_arrive += w
+        t_done = max(t_done, t_arrive) + p
+        done.append(t_done)
+    ttfl = done[0] if done else lat
+    return ttfl, done
+
+
 @dataclass
 class HardwareModel:
     """Per-system transfer/compute constants (paper Table 2 methodology):
@@ -140,6 +167,16 @@ class HardwareModel:
         if not times:
             return 0.0
         return max(max(times), wire_nbytes / self.ingest_bw)
+
+    def streaming_load_time(self, window_nbytes, wire_bw: float,
+                            compute_seconds, lat: float = 0.0):
+        """``streaming_ttfl_time`` with this system's per-window tail costs
+        filled in: deserialize (ingest) + H2D staging + the window's
+        compute. Returns the same ``(ttfl, done)`` pair."""
+        wire = [n / wire_bw for n in window_nbytes]
+        post = [n / self.ingest_bw + n / self.h2d_bw + c
+                for n, c in zip(window_nbytes, compute_seconds)]
+        return streaming_ttfl_time(wire, post, lat=lat)
 
     def pick_fetch_source(self, nbytes: int, have_peer: bool,
                           have_cloud: bool, peer_disk: bool = True,

@@ -50,6 +50,17 @@ def _key_id(key) -> str:
     return f"{fw}/{name}@{ver}"
 
 
+def shard_ranges(st: dict, s: dict) -> List[Tuple[int, int]]:
+    """Destination byte ranges of one shard-table row ``s`` within its
+    entry ``st``: explicit ``ranges`` for layer-planned shards, a single
+    ``index * shard_bytes`` run for classic fixed-size shards."""
+    r = s.get("ranges")
+    if r:
+        return [(int(a), int(b)) for a, b in r]
+    sb = st.get("shard_bytes") or s["nbytes"]
+    return [(s["index"] * sb, s["nbytes"])]
+
+
 class ObjectStore:
     """Content-addressed put/get over a local-dir backend. Thread-safe.
 
@@ -148,7 +159,8 @@ class ObjectStore:
 
     # -- writes -------------------------------------------------------------
     def put_file(self, key, path: str, codec: Optional[str] = None,
-                 shard_bytes: Optional[int] = None) -> str:
+                 shard_bytes: Optional[int] = None,
+                 shard_plan: Optional[str] = None) -> str:
         """Upload a serialized ``.trims`` file; returns its content digest.
 
         The digest is of the *uncompressed* content; the blob is stored
@@ -164,6 +176,17 @@ class ObjectStore:
         manifest — the unit of the cluster's multi-source gather. The
         top-level digest still addresses the whole uncompressed content,
         so an assembled gather is verifiable end-to-end.
+
+        ``shard_plan="layers"`` cuts shard boundaries on **layer windows**
+        instead of fixed offsets (DESIGN.md §9): each shard covers the
+        byte ranges of one execution step's tensors (row slices of the
+        stacked per-layer tensors), and its manifest row additionally
+        records the tensor map ``{layer_index, group, tensor_names,
+        ranges}``. A window larger than ``shard_bytes`` is split into
+        multiple shards of the same ``layer_index``, so a gather can still
+        spread one fat layer across sources (LPT within the window). The
+        range union covers the file exactly — reassembly stays verifiable
+        against the top-level digest.
         """
         codec_obj = get_codec(codec) if codec is not None else self._codec
         sb = self.shard_bytes if shard_bytes is None else (shard_bytes or None)
@@ -171,6 +194,10 @@ class ObjectStore:
             sb = DEFAULT_SHARD_BYTES
         nbytes = os.path.getsize(path)
         t0 = time.perf_counter()
+        if shard_plan is not None:
+            if shard_plan != "layers":
+                raise ValueError(f"unknown shard_plan {shard_plan!r}")
+            return self._put_file_layers(key, path, codec_obj, sb, nbytes, t0)
         if sb is not None:
             # hash pass OUTSIDE the lock (mirrors the whole-blob path:
             # readers must not block behind digesting a multi-GB model);
@@ -237,16 +264,86 @@ class ObjectStore:
                        time.perf_counter() - t0)
         return digest
 
+    def _put_file_layers(self, key, path: str, codec_obj, sb: Optional[int],
+                         nbytes: int, t0: float) -> str:
+        """The ``shard_plan="layers"`` splitter (see :meth:`put_file`)."""
+        from repro.core.layerplan import plan_for_file
+        plan, _ = plan_for_file(path)
+        # cut each window's range list into <= sb pieces (one shard per
+        # window when sb is None or the window fits)
+        pieces: List[Tuple[object, List[Tuple[int, int]]]] = []
+        for w in plan:
+            cur: List[Tuple[int, int]] = []
+            size = 0
+            for off, n in w.ranges:
+                while n > 0:
+                    take = n if sb is None else min(n, sb - size)
+                    if take <= 0:
+                        pieces.append((w, cur))
+                        cur, size = [], 0
+                        continue
+                    cur.append((off, take))
+                    size += take
+                    off += take
+                    n -= take
+                    if sb is not None and size >= sb:
+                        pieces.append((w, cur))
+                        cur, size = [], 0
+            if cur:
+                pieces.append((w, cur))
+
+        # hash pass outside the lock (same discipline as the fixed-size
+        # splitter); blob writes stay under it so gc_blobs is safe
+        h = hashlib.sha256()
+        with open(path, "rb") as f:
+            for chunk in iter(lambda: f.read(8 << 20), b""):
+                h.update(chunk)
+        digest = h.hexdigest()
+        payloads: List[bytes] = []
+        with open(path, "rb") as f:
+            for _, ranges in pieces:
+                parts = []
+                for off, n in ranges:
+                    f.seek(off)
+                    parts.append(f.read(n))
+                payloads.append(b"".join(parts))
+        digests = [hashlib.sha256(p).hexdigest() for p in payloads]
+
+        shards: List[dict] = []
+        with self._lock:
+            self.puts += 1
+            for index, ((w, ranges), data, sdig) in enumerate(
+                    zip(pieces, payloads, digests)):
+                stored = self._store_blob_locked(sdig, codec_obj, data)
+                shards.append({
+                    "index": index, "digest": sdig, "nbytes": len(data),
+                    "stored_nbytes": stored, "codec": codec_obj.name,
+                    "layer_index": w.layer_index, "group": w.group,
+                    "window": w.index,
+                    "tensor_names": list(w.tensor_names),
+                    "ranges": [[off, n] for off, n in ranges]})
+            stored_nbytes = sum(s["stored_nbytes"] for s in shards)
+            self._manifest[_key_id(key)] = {
+                "digest": digest, "nbytes": nbytes,
+                "stored_nbytes": stored_nbytes, "codec": codec_obj.name,
+                "shard_plan": "layers", "shards": shards}
+            self._save_manifest_locked()
+        self._throttle(self.rtt + stored_nbytes / self.bw,
+                       time.perf_counter() - t0)
+        return digest
+
     def put(self, key, tensors: Dict[str, np.ndarray], meta=None,
             codec: Optional[str] = None,
-            shard_bytes: Optional[int] = None) -> str:
+            shard_bytes: Optional[int] = None,
+            shard_plan: Optional[str] = None) -> str:
         """Serialize ``tensors`` to the .trims format and upload."""
         fd, tmp = tempfile.mkstemp(suffix=".trims", dir=self.root)
         os.close(fd)
         try:
             write_model(tmp, tensors, meta)
             return self.put_file(key, tmp, codec=codec,
-                                 shard_bytes=shard_bytes)
+                                 shard_bytes=shard_bytes,
+                                 shard_plan=shard_plan)
         finally:
             try:
                 os.unlink(tmp)
@@ -429,11 +526,16 @@ class ObjectStore:
         out.write(decomp.flush())
         return report
 
-    def _fetch_sharded(self, st: dict, out) -> PipelineReport:
-        """Reassemble a sharded entry into ``out``: shard blobs stream in
-        index order through one ``wire_read | decompress | disk_write``
-        pipeline, so decode and assembly overlap the wire exactly as the
-        whole-blob path does (DESIGN.md §8)."""
+    def _fetch_sharded(self, st: dict, fd: int,
+                       on_shard=None) -> PipelineReport:
+        """Reassemble a sharded entry into open file ``fd``: shard blobs
+        stream in index order through one ``wire_read | decompress |
+        disk_write`` pipeline, so decode and assembly overlap the wire
+        exactly as the whole-blob path does (DESIGN.md §8). Writes are
+        positional (a layer-planned shard's ranges are non-contiguous row
+        slices); ``on_shard(row, data)`` fires after each shard's bytes
+        are digest-verified and landed — the streaming open's per-layer
+        readiness source (DESIGN.md §9)."""
 
         def wire_read(s):
             with open(self._blob_path(s["digest"], s.get("codec", "none")),
@@ -446,22 +548,29 @@ class ObjectStore:
             data = raw if codec == "none" else get_codec(codec).decompress(raw)
             if hashlib.sha256(data).hexdigest() != s["digest"]:
                 raise IOError(f"shard {s['index']}: digest mismatch")
-            return data
+            return s, data
 
-        def disk_write(data):
-            out.write(data)
+        def disk_write(item):
+            s, data = item
+            off = 0
+            for ro, rn in shard_ranges(st, s):
+                os.pwrite(fd, data[off:off + rn], ro)
+                off += rn
+            if on_shard is not None:
+                on_shard(s, data)
             return len(data)
 
         _, report = run_pipeline(
             list(st["shards"]),
             [("wire_read", wire_read, lambda r: len(r[1])),
-             ("decompress", decode, len),
+             ("decompress", decode, lambda r: len(r[1])),
              ("disk_write", disk_write)],
             depth=2)
         return report
 
     def fetch(self, key, dest: DiskStore,
-              report_out: Optional[List] = None) -> Tuple[float, int]:
+              report_out: Optional[List] = None,
+              on_shard=None) -> Tuple[float, int]:
         """Download ``key`` into a local DiskStore.
 
         Returns ``(modeled_seconds, nbytes)`` — the CLOUD leg of a cold
@@ -470,7 +579,9 @@ class ObjectStore:
         pipeline. Concurrent fetches of one key are safe: each writes a
         unique temp file and the last atomic replace wins. When
         ``report_out`` is given, the fetch's :class:`PipelineReport` (or
-        None for uncompressed blobs) is appended.
+        None for uncompressed blobs) is appended. ``on_shard(row, data)``
+        fires per verified shard of a sharded entry, in manifest order —
+        ignored for whole-blob entries.
         """
         dst = dest.path_for(key)
         os.makedirs(os.path.dirname(dst), exist_ok=True)
@@ -489,8 +600,11 @@ class ObjectStore:
             try:
                 with atomic_dest_file(dst, prefix=".fetch-") as (fd, tmp):
                     if st.get("shards"):
-                        with os.fdopen(fd, "wb") as out:
-                            report = self._fetch_sharded(st, out)
+                        try:
+                            os.ftruncate(fd, st["nbytes"])
+                            report = self._fetch_sharded(st, fd, on_shard)
+                        finally:
+                            os.close(fd)
                     elif st["codec"] == "none":
                         os.close(fd)
                         shutil.copyfile(src, tmp)

@@ -461,6 +461,24 @@ def _write_kv(cache_layer, k, v, start: int):
     return {"k": part.shard_cache(k_new), "v": part.shard_cache(v_new)}
 
 
+def prefill_attn_layer(cfg: ModelConfig, layer: Params, cl: Params,
+                       x, positions) -> Tuple[jnp.ndarray, Params]:
+    """One attention-family trunk layer of prefill: (x, kv-cache slot) ->
+    (x', primed slot). Both the lax.scan prefill body and the streaming
+    per-layer path (DESIGN.md §9) call this exact function, so streamed
+    generation is mathematically identical to the batch path."""
+    h = L.apply_norm(cfg, layer["ln1"], x)
+    q, k, v = L.qkv_project(cfg, layer["attn"], h, positions)
+    o = L.attention_core(cfg, q, k, v, causal=True)
+    x = x + L.attention_out(cfg, layer["attn"], o)
+    h = L.apply_norm(cfg, layer["ln2"], x)
+    if "router" in layer["ffn"]:
+        f, _ = M.apply_moe(cfg, layer["ffn"], h)
+    else:
+        f = L.apply_mlp(layer["ffn"], h)
+    return _res(cfg, x + f), _write_kv(cl, k, v, 0)
+
+
 def prefill(cfg: ModelConfig, params: Params, batch, max_len: int
             ) -> Tuple[jnp.ndarray, Params]:
     """Run the full prompt, return last-position logits + primed cache."""
@@ -476,16 +494,7 @@ def prefill(cfg: ModelConfig, params: Params, batch, max_len: int
     if fam in (DENSE, MOE):
         def body(x, xs):
             layer, cl = xs
-            h = L.apply_norm(cfg, layer["ln1"], x)
-            q, k, v = L.qkv_project(cfg, layer["attn"], h, positions)
-            o = L.attention_core(cfg, q, k, v, causal=True)
-            x = x + L.attention_out(cfg, layer["attn"], o)
-            h = L.apply_norm(cfg, layer["ln2"], x)
-            if "router" in layer["ffn"]:
-                f, _ = M.apply_moe(cfg, layer["ffn"], h)
-            else:
-                f = L.apply_mlp(layer["ffn"], h)
-            return _res(cfg, x + f), _write_kv(cl, k, v, 0)
+            return prefill_attn_layer(cfg, layer, cl, x, positions)
 
         x, attn_cache = jax.lax.scan(body, x, (params["layers"], cache["attn"]))
         cache = {"attn": attn_cache}
@@ -723,6 +732,46 @@ def decode_step(cfg: ModelConfig, params: Params, cache: Params,
 
     logits = _logits(cfg, params, x)
     return logits[:, 0], new_cache
+
+
+# ---------------------------------------------------------------------------
+# streaming execution (DESIGN.md §9)
+# ---------------------------------------------------------------------------
+# Per-layer entry points for the attention families (DENSE/MOE): the serving
+# engine jits each once and walks the trunk layer by layer, starting as soon
+# as the stem + layer 0 windows of a streaming load are resident. Each step
+# reuses the exact function the lax.scan bodies run (prefill_attn_layer /
+# _attn_decode), so streamed generation matches the batch path token for
+# token.
+
+def stream_prefill_embed(cfg: ModelConfig, params: Params, tokens):
+    """Stem half of prefill: (B, S) tokens -> residual stream (B, S, D).
+    Needs only the stem window (``embed``)."""
+    return _embed(cfg, params, tokens)
+
+
+def stream_prefill_layer(cfg: ModelConfig, layer: Params, x, positions,
+                         max_len: int):
+    """One trunk layer of prefill; allocates and primes this layer's KV
+    slot. Returns (x', cache_layer)."""
+    cl = _attn_cache_zeros(cfg, x.shape[0], max_len)
+    return prefill_attn_layer(cfg, layer, cl, x, positions)
+
+
+def stream_logits(cfg: ModelConfig, params: Params, x):
+    """Head half: last-position logits (B, V) from the residual stream.
+    Needs only the stem window (``final_norm`` + tied ``embed``)."""
+    return _logits(cfg, params, x[:, -1:, :])[:, 0]
+
+
+def stream_decode_embed(cfg: ModelConfig, params: Params, token):
+    """Stem half of a decode step: (B,) token -> (B, 1, D)."""
+    return part.shard_btd(params["embed"][token][:, None, :].astype(cfg.cdtype))
+
+
+def stream_decode_layer(cfg: ModelConfig, layer: Params, x, cl, pos):
+    """One trunk layer of a decode step. Returns (x', new_cache_layer)."""
+    return _attn_decode(cfg, layer, x, cl, pos)
 
 
 def greedy_generate(cfg: ModelConfig, params: Params, batch,

@@ -68,21 +68,29 @@ class RequestStats:
     compute_s: float
     total_s: float
     modeled_load_s: float = 0.0
+    ttft_s: float = 0.0          # submit -> first token materialized
+    streamed: bool = False       # served via the layer-streaming path (§9)
 
 
 class InferenceEngine:
     def __init__(self, disk: DiskStore, mrm: Optional[MRM] = None,
                  use_trims: bool = True,
-                 prefix_cache_bytes: int = 0):
+                 prefix_cache_bytes: int = 0,
+                 streaming: bool = False):
         self.disk = disk
         self.mrm = mrm
         self.use_trims = use_trims and mrm is not None
+        # streaming (DESIGN.md §9): serve DENSE/MOE requests layer by layer
+        # against a partial open — prefill starts once stem+layer0 land.
+        # Other families (or warm hits) fall back to the batch path.
+        self.streaming = streaming and self.use_trims
         self.trims = TrimsClient(mrm, "engine") if self.use_trims else None
         # exe cache is keyed by architecture signature (not model identity) so
         # same-topology models share programs; the (B, S, max_len) tail keys
         # the actual traced shapes. cfg cache MUST key by (name, version) —
         # version "2" of a model may ship a different architecture.
         self._exe_cache: Dict[Tuple[str, str, int, int, int], Any] = {}
+        self._exe_compiled: set = set()   # sigs whose first call was timed
         self._cfg_cache: Dict[Tuple[str, str], ModelConfig] = {}
         self._lock = threading.RLock()
         self.stats: List[RequestStats] = []
@@ -132,11 +140,19 @@ class InferenceEngine:
         Device-tier prefetch is gated on free HBM: staging into a full
         device tier would evict (or capacity-block) the model the *current*
         request is about to open. Without headroom we still warm the host
-        tier — that is where the expensive disk+deserialize work lives."""
+        tier — that is where the expensive disk+deserialize work lives.
+
+        With ``streaming`` on, a model that is not yet disk-resident but is
+        reachable (object store / cloud / peer hook) is warmed through a
+        partial open instead (``MRM.open_stream``): when a request for it
+        arrives mid-flight, its streaming open coalesces onto this one and
+        inherits the per-window readiness already accumulated."""
         if not self.use_trims:
             return None
         key = ModelKey(FRAMEWORK, name, version)
         if not self.disk.contains(key):
+            if self.streaming and self._fetchable(key):
+                return self.mrm.open_stream(key, want_handle=False)
             return None
         tier = "device"
         try:
@@ -146,42 +162,94 @@ class InferenceEngine:
             tier = "host"
         return self.mrm.prefetch(key, tier=tier)
 
+    def _fetchable(self, key: ModelKey) -> bool:
+        m = self.mrm
+        try:
+            return ((m.objectstore is not None and m.objectstore.contains(key))
+                    or (m.cloud is not None and m.cloud.contains(key))
+                    or m.remote_fetch is not None)
+        except Exception:  # noqa: BLE001 — a hint must never fail the worker
+            return False
+
     # ------------------------------------------------------------- compile
-    def _executable(self, sm: ServableModel, kind: str, B: int, S: int,
-                    max_len: int) -> Tuple[Any, float]:
+    def _executable(self, cfg: ModelConfig, kind: str, B: int, S: int,
+                    max_len: int) -> Tuple[Any, float, tuple]:
         """Executable cache keyed by topology signature, NOT model name —
         same-architecture models share one compiled program. ``max_len`` is
-        part of the key: it is baked into the traced program."""
-        sig = (arch_signature(sm.cfg), kind, B, S, max_len)
+        part of the key: it is baked into the traced program.
+
+        Returns ``(exe, trace_s, sig)``; XLA compiles on the first call,
+        which :meth:`_run_exe` times against ``sig``."""
+        sig = (arch_signature(cfg), kind, B, S, max_len)
         with self._lock:
             exe = self._exe_cache.get(sig)
         if exe is not None:
             self.exe_cache_hits += 1
-            return exe, 0.0
+            return exe, 0.0, sig
         self.exe_cache_misses += 1
-        cfg = sm.cfg
         t0 = time.perf_counter()
         if kind == "prefill":
             exe = jax.jit(lambda p, b: M.prefill(cfg, p, b, max_len))
         elif kind == "decode":
             exe = jax.jit(lambda p, c, t, pos: M.decode_step(cfg, p, c, t, pos))
+        elif kind == "sembed":
+            exe = jax.jit(lambda p, t: M.stream_prefill_embed(cfg, p, t))
+        elif kind == "slayer":
+            exe = jax.jit(
+                lambda l, x, pos: M.stream_prefill_layer(cfg, l, x, pos, max_len))
+        elif kind == "slogits":
+            exe = jax.jit(lambda p, x: M.stream_logits(cfg, p, x))
+        elif kind == "sdembed":
+            exe = jax.jit(lambda p, t: M.stream_decode_embed(cfg, p, t))
+        elif kind == "sdlayer":
+            exe = jax.jit(
+                lambda l, x, c, pos: M.stream_decode_layer(cfg, l, x, c, pos))
         else:
             exe = jax.jit(lambda p, b: M.forward(cfg, p, b)[0])
         compile_s = time.perf_counter() - t0  # trace cost; XLA compile on 1st call
         with self._lock:
             self._exe_cache[sig] = exe
-        return exe, compile_s
+        return exe, compile_s, sig
+
+    def _run_exe(self, sig: tuple, exe, *args) -> Tuple[Any, float]:
+        """Run a cached executable, timing its FIRST execution (when XLA
+        actually compiles) so compile cost lands in ``compile_s`` instead of
+        polluting ``compute_s``. Returns ``(out, extra_compile_s)``."""
+        with self._lock:
+            first = sig not in self._exe_compiled
+            if first:
+                self._exe_compiled.add(sig)
+        if not first:
+            return exe(*args), 0.0
+        t0 = time.perf_counter()
+        out = exe(*args)
+        jax.block_until_ready(out)
+        return out, time.perf_counter() - t0
 
     # --------------------------------------------------------------- infer
     def generate(self, name: str, tokens: np.ndarray, max_new_tokens: int = 8,
                  version: str = "1") -> Tuple[np.ndarray, RequestStats]:
-        """Prefill + greedy decode. tokens: (B, S) int32."""
+        """Prefill + greedy decode. tokens: (B, S) int32.
+
+        With ``streaming`` on, cold DENSE/MOE loads are served layer by
+        layer against a partial open (same tokens, earlier first token);
+        anything else falls through to the batch path below."""
+        if self.streaming:
+            r = self._generate_streaming(name, tokens, max_new_tokens, version)
+            if r is not None:
+                return r
+        return self._generate_batch(name, tokens, max_new_tokens, version)
+
+    def _generate_batch(self, name: str, tokens: np.ndarray,
+                        max_new_tokens: int, version: str
+                        ) -> Tuple[np.ndarray, RequestStats]:
         t_start = time.perf_counter()
         sm, load_s = self.load_model(name, version)
         B, S = tokens.shape
         max_len = S + max_new_tokens
-        exe_p, c1 = self._executable(sm, "prefill", B, S, max_len)
-        exe_d, c2 = self._executable(sm, "decode", B, 1, max_len)
+        exe_p, c1, sig_p = self._executable(sm.cfg, "prefill", B, S, max_len)
+        exe_d, c2, sig_d = self._executable(sm.cfg, "decode", B, 1, max_len)
+        extra_c = 0.0
 
         t0 = time.perf_counter()
         batch = {"tokens": jnp.asarray(tokens, jnp.int32)}
@@ -197,28 +265,171 @@ class InferenceEngine:
         if hit is not None:
             logits, cache = hit  # immutable jax arrays: zero-copy share
         else:
-            logits, cache = exe_p(sm.params, batch)
+            (logits, cache), dc = self._run_exe(sig_p, exe_p, sm.params, batch)
+            extra_c += dc
             if self.prefix_kv is not None:
                 self.prefix_kv.insert(pkey, logits, cache,
                                       time.perf_counter() - t0)
         tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        jax.block_until_ready(tok)
+        ttft_s = time.perf_counter() - t_start
         out = [tok]
         for i in range(max_new_tokens - 1):
-            logits, cache = exe_d(sm.params, cache, tok, jnp.int32(S + i))
+            (logits, cache), dc = self._run_exe(
+                sig_d, exe_d, sm.params, cache, tok, jnp.int32(S + i))
+            extra_c += dc
             tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
             out.append(tok)
         result = np.asarray(jnp.stack(out, axis=1))
-        compute_s = time.perf_counter() - t0
+        compute_s = max(0.0, time.perf_counter() - t0 - extra_c)
 
         tm = sm.loaded.timings
         st = RequestStats(
             model=name, cold=not sm.loaded.via_trims or tm.tier_hit != "device",
             tier_hit=tm.tier_hit, model_load_s=load_s,
-            compile_s=c1 + c2, compute_s=compute_s,
+            compile_s=c1 + c2 + extra_c, compute_s=compute_s,
             total_s=time.perf_counter() - t_start,
-            modeled_load_s=tm.modeled_total())
+            modeled_load_s=tm.modeled_total(), ttft_s=ttft_s)
         self.stats.append(st)
         self.release(sm)
+        return result, st
+
+    def _generate_streaming(self, name: str, tokens: np.ndarray,
+                            max_new_tokens: int, version: str
+                            ) -> Optional[Tuple[np.ndarray, RequestStats]]:
+        """Layer-streaming serve (DESIGN.md §9): open the model through
+        :meth:`MRM.open_stream`, start prefill as soon as the stem and
+        layer-0 windows are resident, and chase the stream layer by layer.
+        MoE expert windows of the NEXT layer are demanded while the current
+        layer computes. Returns None to fall back to the batch path (warm
+        hit, unsupported family, or no layer plan)."""
+        t_start = time.perf_counter()
+        key = ModelKey(FRAMEWORK, name, version)
+        cfg = self._cfg_cache.get((name, version))
+        if cfg is None and self.disk.contains(key):
+            cfg = self._config_for(key)
+        if cfg is None and not self._fetchable(key):
+            return None
+        if cfg is not None and cfg.family not in ("dense", "moe"):
+            return None
+        from repro.core.cache import Tier
+        if self.mrm.resident(key, Tier.DEVICE) or \
+                self.mrm.resident(key, Tier.HOST):
+            return None            # warm model: batch path is strictly better
+
+        fut = self.mrm.open_stream(key)
+        blocked_s = 0.0
+        t0 = time.perf_counter()
+        fut.wait_prefix(1)          # stem (+ layer 0) landing / plan known
+        blocked_s += time.perf_counter() - t0
+        if cfg is None:             # cloud-only model: config rides the meta
+            raw = (fut.meta or {}).get("config")
+            if raw is not None:
+                cfg = ModelConfig(**dict(raw))
+                self._cfg_cache[(name, version)] = cfg
+        if fut.plan is None or cfg is None or cfg.family not in ("dense", "moe"):
+            # warm hit / non-streaming primary / unknown config: batch path
+            # (the close below just drops our reference; bytes stay cached)
+            h = fut.result()
+            if h is not None:
+                self.mrm.close(h)
+            return None
+
+        plan = fut.plan
+        # windows needed before layer i can run: every window up to and
+        # including layer i's last (expert windows follow their base window)
+        n_layers = cfg.n_layers
+        per_layer_prefix = [0] * n_layers
+        expert_windows: Dict[int, List[int]] = {}
+        for w in plan:
+            if w.layer_index >= 0 and w.layer_index < n_layers:
+                per_layer_prefix[w.layer_index] = max(
+                    per_layer_prefix[w.layer_index], w.index + 1)
+                if w.group == "expert":
+                    expert_windows.setdefault(w.layer_index, []).append(w.index)
+        if any(p == 0 for p in per_layer_prefix):
+            h = fut.result()
+            if h is not None:
+                self.mrm.close(h)
+            return None
+
+        B, S = tokens.shape
+        max_len = S + max_new_tokens
+        exe_e, c1, sig_e = self._executable(cfg, "sembed", B, S, max_len)
+        exe_l, c2, sig_l = self._executable(cfg, "slayer", B, S, max_len)
+        exe_g, c3, sig_g = self._executable(cfg, "slogits", B, S, max_len)
+        exe_de, c4, sig_de = self._executable(cfg, "sdembed", B, 1, max_len)
+        exe_dl, c5, sig_dl = self._executable(cfg, "sdlayer", B, 1, max_len)
+        trace_s = c1 + c2 + c3 + c4 + c5
+        extra_c = 0.0
+
+        template = jax.eval_shape(
+            lambda k: M.init_params(cfg, k), jax.random.PRNGKey(0))
+        stem_tpl = {k: v for k, v in template.items() if k != "layers"}
+        conv = jnp.asarray
+
+        def stem_params():
+            flat = {n: a for n, a in fut.arrays.items()
+                    if not n.startswith("layers/")}
+            return flat_to_params_like(stem_tpl, flat, convert=conv)
+
+        def layer_params(i):
+            flat = {n[len("layers/"):]: fut.arrays[n][i]
+                    for n in fut.arrays if n.startswith("layers/")}
+            return flat_to_params_like(template["layers"], flat, convert=conv)
+
+        t_c0 = time.perf_counter()
+        tw = time.perf_counter()
+        fut.wait_prefix(per_layer_prefix[0])
+        blocked_s += time.perf_counter() - tw
+        stem = stem_params()
+        positions = jnp.arange(S)[None, :]
+        x, dc = self._run_exe(sig_e, exe_e, stem, jnp.asarray(tokens, jnp.int32))
+        extra_c += dc
+        layers: List[Any] = []
+        caches: List[Any] = []
+        for i in range(n_layers):
+            tw = time.perf_counter()
+            fut.wait_prefix(per_layer_prefix[i])
+            blocked_s += time.perf_counter() - tw
+            layers.append(layer_params(i))
+            for wi in expert_windows.get(i + 1, ()):   # overlap next layer's
+                fut.demand(wi)                         # expert bank with math
+            (x, cl), dc = self._run_exe(sig_l, exe_l, layers[i], x, positions)
+            extra_c += dc
+            caches.append(cl)
+        logits, dc = self._run_exe(sig_g, exe_g, stem, x)
+        extra_c += dc
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        jax.block_until_ready(tok)
+        ttft_s = time.perf_counter() - t_start
+        out = [tok]
+        for step in range(max_new_tokens - 1):
+            pos = jnp.int32(S + step)
+            x, dc = self._run_exe(sig_de, exe_de, stem, tok)
+            extra_c += dc
+            for i in range(n_layers):
+                (x, caches[i]), dc = self._run_exe(
+                    sig_dl, exe_dl, layers[i], x, caches[i], pos)
+                extra_c += dc
+            logits, dc = self._run_exe(sig_g, exe_g, stem, x)
+            extra_c += dc
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            out.append(tok)
+        result = np.asarray(jnp.stack(out, axis=1))
+        compute_s = max(0.0, time.perf_counter() - t_c0 - extra_c)
+
+        h = fut.result()            # loader done (verifies all windows)
+        tm = fut.timings
+        st = RequestStats(
+            model=name, cold=True, tier_hit=tm.tier_hit,
+            model_load_s=blocked_s,   # critical-path wait, not wall staging
+            compile_s=trace_s + extra_c, compute_s=compute_s,
+            total_s=time.perf_counter() - t_start,
+            modeled_load_s=tm.modeled_total(), ttft_s=ttft_s, streamed=True)
+        self.stats.append(st)
+        if h is not None:
+            self.mrm.close(h)
         return result, st
 
 
@@ -242,10 +453,11 @@ class ServingWorkers:
     'concurrency level'."""
 
     def __init__(self, engine: InferenceEngine, n_workers: int = 4,
-                 lookahead_prefetch: bool = True):
+                 lookahead_prefetch: bool = True, lookahead: int = 1):
         self.engine = engine
         self.n_workers = n_workers
         self.lookahead_prefetch = lookahead_prefetch
+        self.lookahead = max(1, lookahead)   # distinct queued models to warm
         import queue as _q
         self.q: "_q.Queue[Optional[Request]]" = _q.Queue()
         self.threads = [threading.Thread(target=self._run, daemon=True)
@@ -258,13 +470,26 @@ class ServingWorkers:
         self.q.put(req)
         return req
 
-    def _peek_next_model(self) -> Optional[str]:
-        """Model of the next queued request (no dequeue) — prefetch target."""
+    def _peek_next_models(self, n: int) -> List[str]:
+        """First ``n`` DISTINCT models in the queue (no dequeue) — the
+        prefetch targets. Deduped so a burst of requests for one model
+        costs one hint."""
+        out: List[str] = []
+        seen = set()
         with self.q.mutex:
             for item in self.q.queue:
-                if item is not None:
-                    return item.model
-        return None
+                if item is None or item.model in seen:
+                    continue
+                seen.add(item.model)
+                out.append(item.model)
+                if len(out) >= n:
+                    break
+        return out
+
+    def _peek_next_model(self) -> Optional[str]:
+        """Model of the next queued request (no dequeue) — prefetch target."""
+        nxt = self._peek_next_models(1)
+        return nxt[0] if nxt else None
 
     def _run(self):
         while True:
@@ -272,11 +497,20 @@ class ServingWorkers:
             if req is None:
                 return
             if self.lookahead_prefetch:
-                nxt = self._peek_next_model()
-                if nxt is not None and nxt != req.model:
-                    # overlap the NEXT request's model staging with THIS
-                    # request's load+compute (async MRM load, zero refs)
-                    self.engine.prefetch(nxt)
+                eng = self.engine
+                for nxt in self._peek_next_models(self.lookahead):
+                    if nxt == req.model:
+                        continue
+                    if eng.use_trims:
+                        from repro.core.cache import Tier
+                        k = ModelKey(FRAMEWORK, nxt, "1")
+                        if eng.mrm.resident(k, Tier.DEVICE):
+                            continue   # already staged: the hint is free work
+                    # overlap the NEXT requests' model staging with THIS
+                    # request's load+compute (async MRM load, zero refs);
+                    # with streaming on, non-disk-resident targets warm
+                    # through a partial open (layer hints ride along)
+                    eng.prefetch(nxt)
             try:
                 req.result, req.stats = self.engine.generate(
                     req.model, req.tokens, req.max_new)
