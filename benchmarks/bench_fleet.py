@@ -1,0 +1,135 @@
+"""Fleet-scale directory bench: single-lock map vs consistent-hash shards
+(DESIGN.md §10).
+
+A 100-node virtual-clock fleet (``repro.core.fleetsim``) replays ONE
+seeded arrival trace against both directory policies and measures what
+the control plane actually delivers under fault injection:
+
+  * **directory op throughput** — every placement op is charged to the
+    owning shard's service queue (the single map is the degenerate
+    one-queue case, which is exactly what its one lock serializes to);
+    throughput is ops / busiest-queue seconds.
+  * **staleness-induced mis-fetch rate** — every directory answer is
+    graded against the simulated data-plane truth at probe time; a
+    dead/stale holder costs one wasted probe and counts once.
+  * **hot-key owner failover** — a registry redeploy invalidates the hot
+    sharded model's cached copies, its shard owner is killed mid-gather,
+    and the clock runs until no directory view lists the dead node.
+
+Asserted here (the ISSUE acceptance bar): the sharded directory sustains
+>= 4x the single-lock op throughput with a mis-fetch rate <= 2%, and the
+owner death completes ALL in-flight gathers via re-plan — none failed,
+none lost. ``--smoke`` runs a 30-node fleet and asserts only the
+correctness half (the CI fast gate); the throughput/staleness thresholds
+need the full 100-node trace.
+
+All decisive numbers are virtual-clock/modeled (datasheet constants from
+``HardwareModel``), so the run is deterministic on any host.
+"""
+from __future__ import annotations
+
+from benchmarks.common import write_csv
+from repro.core.fleetsim import Fault, FleetConfig, compare_policies
+
+# full profile: 100 nodes, 50 virtual seconds, all four fault kinds
+FULL = FleetConfig(
+    n_nodes=100, n_models=60, n_sharded=4, data_shards=8,
+    n_requests=20000, rate_rps=400.0,
+    faults=(
+        Fault("stale_flood", at_s=10.0, count=120),
+        Fault("partition", at_s=18.0, duration_s=2.0),
+        Fault("kill_hot_owner", at_s=30.0),
+        Fault("churn", at_s=40.0),
+    ))
+
+# smoke profile: 30 nodes, 10 virtual seconds, same fault kinds
+SMOKE = FleetConfig(
+    n_nodes=30, n_models=30, n_sharded=2, data_shards=6,
+    n_requests=3000, rate_rps=300.0, node_capacity=4, n_dir_shards=16,
+    faults=(
+        Fault("stale_flood", at_s=2.0, count=40),
+        Fault("partition", at_s=4.0, duration_s=1.0),
+        Fault("kill_hot_owner", at_s=6.0),
+        Fault("churn", at_s=8.0),
+    ))
+
+SPEEDUP_FLOOR = 4.0
+MISFETCH_CEIL = 0.02
+
+
+def _assert_correctness(rep: dict, policy: str) -> None:
+    """The correctness half (smoke + full): owner death interrupts at
+    least one in-flight gather and every gather still completes via
+    re-plan — no gather fails, none is left outstanding — while both
+    directory views converge and the failover clock was measured."""
+    assert rep["gathers_interrupted"] >= 1, \
+        f"{policy}: owner death must catch a gather in flight"
+    assert rep["gathers_replanned"] >= rep["gathers_interrupted"]
+    assert rep["gathers_completed"] == rep["gathers_started"], \
+        f"{policy}: every in-flight gather must complete via re-plan"
+    assert rep["gathers_failed"] == 0 and rep["gathers_outstanding"] == 0
+    assert rep["views_agree"], f"{policy}: views must reconcile"
+    assert rep["failover_s"] is not None and rep["failover_s"] >= 0.0
+
+
+def run(smoke: bool = False, verbose: bool = True):
+    cfg = SMOKE if smoke else FULL
+    reports = compare_policies(cfg)
+    single, sharded = reports["single"], reports["sharded"]
+    speedup = (sharded["dir_throughput_ops_s"]
+               / max(single["dir_throughput_ops_s"], 1e-12))
+    if verbose:
+        print(f"-- fleet: {cfg.n_nodes} nodes, {cfg.n_requests} requests, "
+              f"{len(cfg.faults)} faults ({'smoke' if smoke else 'full'}) --")
+        hdr = (f"{'policy':>8s} {'dir ops':>8s} {'ops/s':>12s} "
+               f"{'misfetch':>9s} {'failover':>9s} {'gathers':>9s} "
+               f"{'replan':>6s}")
+        print(hdr)
+        for name, rep in reports.items():
+            print(f"{name:>8s} {rep['dir_ops']:8d} "
+                  f"{rep['dir_throughput_ops_s']:12.0f} "
+                  f"{rep['misfetch_rate']:9.4f} "
+                  f"{rep['failover_s']:9.4f} "
+                  f"{rep['gathers_completed']:4d}/{rep['gathers_started']:<4d} "
+                  f"{rep['gathers_replanned']:6d}")
+        print(f"   sharded/single op throughput: {speedup:.1f}x   "
+              f"(sharded balance: max/mean shard load "
+              f"{sharded['shard_balance']:.2f})")
+
+    for name, rep in reports.items():
+        _assert_correctness(rep, name)
+    # single view = one map: the drop purges everything at once
+    assert single["failover_s"] == 0.0
+    assert sharded["failover_s"] <= 2 * cfg.sync_every_s + 1e-9, \
+        "anti-entropy must clean the dead owner within ~2 sync rounds"
+    if not smoke:  # the throughput/staleness thresholds need 100 nodes
+        assert speedup >= SPEEDUP_FLOOR, \
+            f"sharded must sustain >= {SPEEDUP_FLOOR}x single-lock " \
+            f"throughput, got {speedup:.2f}x"
+        assert sharded["misfetch_rate"] <= MISFETCH_CEIL, \
+            f"mis-fetch rate {sharded['misfetch_rate']:.4f} > " \
+            f"{MISFETCH_CEIL}"
+
+    rows = []
+    for name, rep in reports.items():
+        rows.append({"mode": "smoke" if smoke else "full", "policy": name,
+                     **{k: v for k, v in rep.items()
+                        if isinstance(v, (int, float, bool, str))
+                        or v is None}})
+    write_csv("fleet_directory", rows)
+    if verbose:
+        print("   OK: all in-flight gathers completed via re-plan"
+              + ("" if smoke else
+                 f"; >= {SPEEDUP_FLOOR:.0f}x throughput at <= "
+                 f"{MISFETCH_CEIL:.0%} mis-fetch"))
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="30-node fleet, correctness asserts only "
+                         "(the CI fast gate)")
+    args = ap.parse_args()
+    run(smoke=args.smoke)

@@ -69,12 +69,21 @@ def run_demotion_ablation(env: BenchEnv, n_rounds: int = 4, verbose=True,
         mrm = MRM(env.disk, device_capacity=int(size * 2.5),
                   host_capacity=int(size * 2.5), hw=env.hw,
                   demote_on_evict=demote, policy=policy)
+        vclock = [0.0]
+        if mrm.slo is not None:
+            # seed-audit fix (bench_slo technique): the slo predictor's
+            # recency signal must come from the modeled timeline, not
+            # host wall time — otherwise eviction decisions (and the
+            # lru/slo parity gate) vary with host speed and break A/B
+            # trace comparability
+            mrm.slo.predictor.clock = lambda: vclock[0]
         tier_hits = []
         for _ in range(n_rounds):
             for name in names:
                 h = mrm.open(ModelKey("repro-jax", name, "1"))
                 tier_hits.append(h.timings.tier_hit)
                 mrm.close(h)
+                vclock[0] += h.timings.modeled_total()
         stats = mrm.stats()
         rows.append({"demote_on_evict": demote, "policy": policy,
                      "tier_hits": tier_hits,

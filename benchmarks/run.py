@@ -113,6 +113,19 @@ def main() -> None:
                 f"wire_dom_cells={sum(1 for r in rows_st if r['wire_dominated'])};"
                 f"identical={all(m['identical'] for m in mech_st)}"))
 
+    print("== fleet: sharded directory vs single-lock map under faults ==",
+          flush=True)
+    from benchmarks import bench_fleet
+    rows_f = bench_fleet.run(smoke=not args.full, verbose=True)
+    by_pol = {r["policy"]: r for r in rows_f}
+    f_single, f_shard = by_pol["single"], by_pol["sharded"]
+    out.append(("fleet_directory",
+                1e6 / max(f_shard["dir_throughput_ops_s"], 1e-12),
+                f"dir_speedup={f_shard['dir_throughput_ops_s'] / max(f_single['dir_throughput_ops_s'], 1e-12):.1f}x;"
+                f"misfetch={f_shard['misfetch_rate']:.2%};"
+                f"failover_s={f_shard['failover_s']:.3f};"
+                f"replans={f_shard['gathers_replanned']}"))
+
     print("== compression: codec x ratio x link bw ==", flush=True)
     from benchmarks import bench_compression
     rows_z = bench_compression.run(smoke=not args.full, verbose=True)

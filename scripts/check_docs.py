@@ -36,6 +36,9 @@ REQUIRED_CONTENT = [
     ("DESIGN.md", "Layer-granular streaming staging"),
     ("DESIGN.md", "streaming_ttfl_time"),
     ("DESIGN.md", "wait_prefix"),
+    ("DESIGN.md", "Sharded directory & the fleet simulator"),
+    ("DESIGN.md", "anti-entropy"),
+    ("DESIGN.md", "consistent-hash"),
     (os.path.join("docs", "API.md"), "ClusterDirectory"),
     (os.path.join("docs", "API.md"), "shard_bytes"),
     (os.path.join("docs", "API.md"), "fetch_shard"),
@@ -54,7 +57,13 @@ REQUIRED_CONTENT = [
     (os.path.join("docs", "API.md"), "shard_plan"),
     (os.path.join("docs", "API.md"), "streaming_ttfl_time"),
     (os.path.join("docs", "API.md"), "StreamAssembler"),
+    (os.path.join("docs", "API.md"), "DirectoryProtocol"),
+    (os.path.join("docs", "API.md"), "make_directory"),
+    (os.path.join("docs", "API.md"), "ShardedClusterDirectory"),
+    (os.path.join("docs", "API.md"), "FleetSim"),
+    (os.path.join("docs", "API.md"), "directory_op_time"),
     ("README.md", "bench_streaming"),
+    ("README.md", "bench_fleet"),
 ]
 
 LINK_RE = re.compile(r"(?<!\!)\[[^\]]+\]\(([^)\s]+)\)")

@@ -36,14 +36,22 @@ if [[ "${1:-}" == "--fast" ]]; then
     # corner) and streamed generate() must match the batch path byte for
     # byte (asserted inside the benchmark)
     python -m benchmarks.bench_streaming --smoke
+    # fleet-scale directory (DESIGN.md §10): 30-node virtual-clock fleet
+    # under fault injection — hot-key owner death must complete every
+    # in-flight gather via re-plan and both directory views must
+    # reconcile (asserted inside the benchmark; the 100-node throughput
+    # and mis-fetch thresholds run in the full bench)
+    python -m benchmarks.bench_fleet --smoke
 else
     # coverage gate for the paper-core package (full mode only): enforced
     # whenever pytest-cov is importable; the floor tracks the suite, so
     # new core/ code without tests fails the full gate
     if python -c "import pytest_cov" 2>/dev/null; then
-        # --cov=repro.core already spans layerplan; name the streaming
-        # module explicitly so a future package split keeps it gated
+        # --cov=repro.core already spans layerplan; name the streaming,
+        # directory and fleet-simulator modules explicitly so a future
+        # package split keeps them gated
         ARGS+=(--cov=repro.core --cov=repro.core.layerplan
+               --cov=repro.core.directory --cov=repro.core.fleetsim
                --cov-fail-under=70)
     else
         echo "ci.sh: pytest-cov not installed - skipping the coverage gate"

@@ -16,7 +16,11 @@ from repro.core.codec import CODECS, Codec, get_codec, sample_ratio  # noqa: F40
 from repro.core.costmodel import (  # noqa: F401
     HardwareModel, get_hardware, pipelined_stage_time, streaming_ttfl_time,
 )
+from repro.core.directory import (  # noqa: F401
+    DirectoryProtocol, HashRing, ShardedClusterDirectory, make_directory,
+)
 from repro.core.faas import Container, FaaSPlatform, IsolationError, Router  # noqa: F401
+from repro.core.fleetsim import Fault, FleetConfig, FleetSim, SimMember  # noqa: F401
 from repro.core.layerplan import (  # noqa: F401
     LayerWindow, StreamAssembler, build_layer_plan, plan_for_file,
 )

@@ -174,7 +174,7 @@ class ClusterDirectory:
             out = [(name, min(tiers, key=lambda t: t.value))
                    for name, tiers in self._where.get(key, {}).items()
                    if tiers and name != exclude]
-        return sorted(out, key=lambda nt: nt[1].value)
+        return sorted(out, key=lambda nt: (nt[1].value, nt[0]))
 
     def warmest(self, key: ModelKey,
                 exclude: Optional[str] = None) -> Optional[Tuple[str, Tier]]:
@@ -199,7 +199,7 @@ class ClusterDirectory:
             out = [(name, min(tiers, key=lambda t: t.value))
                    for name, tiers in table.items()
                    if tiers and name != exclude]
-        return sorted(out, key=lambda nt: nt[1].value)
+        return sorted(out, key=lambda nt: (nt[1].value, nt[0]))
 
     def shards_on(self, key: ModelKey, node_name: str) -> List[int]:
         """Shard indices ``node_name`` holds explicit placements for."""
@@ -229,7 +229,8 @@ class ClusterNode:
     gather (§8), and the CLOUD tier.
     """
 
-    def __init__(self, name: str, mrm: MRM, directory: ClusterDirectory,
+    def __init__(self, name: str, mrm: MRM,
+                 directory: "ClusterDirectory",  # any DirectoryProtocol impl
                  peer_fetch: bool = True,
                  peer_codec=None,  # codec name or a tuned Codec instance
                  gather: bool = True):
@@ -876,8 +877,13 @@ class Cluster:
     """
 
     def __init__(self, objectstore=None,
-                 directory: Optional[ClusterDirectory] = None,
+                 directory: "Optional[object]" = None,
                  peer_codec: Optional[str] = None):
+        # ``directory`` accepts an instance satisfying DirectoryProtocol,
+        # a policy name ("single" | "sharded"), or None (single-map).
+        if isinstance(directory, str):
+            from repro.core.directory import make_directory
+            directory = make_directory(directory)
         self.directory = directory or ClusterDirectory()
         self.objectstore = objectstore
         self.peer_codec = peer_codec

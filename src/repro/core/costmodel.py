@@ -29,6 +29,10 @@ DECOMPRESS_BW = 1.5e9          # B/s single-stream inflate (zstd-class;
 COMPRESS_BW = 400e6            # B/s single-stream deflate (sender side)
 DEFAULT_SHARD_BYTES = 16 << 20  # default shard size for sharded manifests
                                 # (DESIGN.md §8)
+DIR_OP_S = 2e-6                # directory-shard service time per placement
+                               # op (one guarded dict update — DESIGN.md §10)
+DIR_RTT = 200e-6               # client -> directory round trip (intra-DC)
+DIR_SYNC_ENTRY_S = 0.5e-6      # anti-entropy merge cost per record exchanged
 
 
 def pipelined_stage_time(stage_seconds, n_chunks: int,
@@ -94,6 +98,9 @@ class HardwareModel:
                                     # gather saturates at (DESIGN.md §8)
     decompress_bw: float = DECOMPRESS_BW  # single-stream inflate rate
     compress_bw: float = COMPRESS_BW      # single-stream deflate rate
+    dir_op_s: float = DIR_OP_S            # directory op service time (§10)
+    dir_rtt: float = DIR_RTT              # client -> directory round trip
+    dir_sync_entry_s: float = DIR_SYNC_ENTRY_S  # anti-entropy per-record cost
 
     def h2d_time(self, nbytes: int) -> float:
         return nbytes / self.h2d_bw
@@ -167,6 +174,22 @@ class HardwareModel:
         if not times:
             return 0.0
         return max(max(times), wire_nbytes / self.ingest_bw)
+
+    # -- control-plane costs (DESIGN.md §10) --------------------------------
+    def directory_op_time(self, queue_s: float = 0.0) -> float:
+        """One placement op (publish/withdraw/lookup) against a directory
+        shard: the intra-DC round trip, whatever service backlog the
+        owning shard already has (``queue_s`` — the fleet simulator's
+        per-shard queue), and the op's own service time. The single-map
+        baseline is the degenerate case where EVERY op queues on one
+        shard — which is exactly why it stops scaling (DESIGN.md §10)."""
+        return self.dir_rtt + queue_s + self.dir_op_s
+
+    def directory_sync_time(self, n_records: int) -> float:
+        """One anti-entropy round exchanging ``n_records`` placement
+        records between two directory views: a round trip plus the
+        per-record merge cost on the receiving side."""
+        return self.dir_rtt + max(0, n_records) * self.dir_sync_entry_s
 
     def streaming_load_time(self, window_nbytes, wire_bw: float,
                             compute_seconds, lat: float = 0.0):

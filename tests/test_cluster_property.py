@@ -1,4 +1,4 @@
-"""Property-based tests for the ClusterDirectory (DESIGN.md §6, §8).
+"""Property-based tests for the placement directory (DESIGN.md §6, §8, §10).
 
 Invariants, driven over arbitrary interleavings of register / publish /
 withdraw / shard-placement / drop_node operations:
@@ -12,19 +12,29 @@ withdraw / shard-placement / drop_node operations:
   D3: against a REAL cluster (MRMs, tier caches, shard caches), every
       directory entry points at an actually-resident (key, shard, node,
       tier) — across loads, demotions, evictions and node drops.
+  D4: (differential oracle, §10) the single-map and the consistent-hash
+      sharded directory answer every query identically for every trace —
+      the gate for swapping one in for the other.
+  D5: (owner failover, §10) dropping a shard owner with gathers in flight
+      never loses the open: the plan re-validates, the lost shards
+      re-plan onto CLOUD, the assembled bytes stay digest-correct, and
+      the dead node is never listed again.
 
 The interleavings run twice over: hypothesis-driven when the package is
 installed, and a seeded ``random.Random`` driver that always runs (so the
 invariants stay enforced on minimal containers without adding a skip).
 """
+import hashlib
 import random
+import tempfile
 import threading
 
 import numpy as np
 import pytest
 
 from repro.core import (CapacityError, Cluster, ClusterDirectory, DiskStore,
-                        HardwareModel, MRM, ModelKey, ObjectStore, Tier)
+                        HardwareModel, MRM, ModelKey, ObjectStore,
+                        ShardedClusterDirectory, Tier)
 
 try:
     from hypothesis import given, settings, strategies as st
@@ -54,17 +64,19 @@ def _warmest(tiers):
 
 
 def _apply_directory_ops(ops):
-    """Replay ``ops`` against a real ClusterDirectory and a reference
-    model side by side, asserting D1/D2 after every operation.
+    """Replay ``ops`` against the single-map directory, the sharded
+    directory AND a reference model side by side, asserting D1/D2
+    against the reference and D4 (both impls answer identically,
+    including order) after every operation.
 
     Each op is ``(kind, a, b, c)`` with the integers decoded modulo the
     small name/key/tier spaces, so any integer tuple is a valid op.
     """
-    d = ClusterDirectory()
-    alive = {}
+    dirs = [ClusterDirectory(), ShardedClusterDirectory(n_shards=4)]
+    alive = {}        # name -> one registered _FakeNode per directory
     placements = {}   # (key, name) -> set of tiers
     shards = {}       # (key, index, name) -> set of tiers
-    gen = d.generation
+    gens = [d.generation for d in dirs]
     for kind, a, b, c in ops:
         name = NAMES[a % len(NAMES)]
         key = KEYS[b % len(KEYS)]
@@ -72,64 +84,80 @@ def _apply_directory_ops(ops):
         index = c % 4
         if kind == "register":
             if name in alive:
-                with pytest.raises(KeyError):
-                    d.register(_FakeNode(name))
+                for d in dirs:
+                    with pytest.raises(KeyError):
+                        d.register(_FakeNode(name))
             else:
-                node = _FakeNode(name)
-                d.register(node)
-                alive[name] = node
+                alive[name] = [_FakeNode(name) for _ in dirs]
+                for d, node in zip(dirs, alive[name]):
+                    d.register(node)
         elif kind == "drop":
-            node = alive.pop(name, None)
-            d.drop_node(name)
-            assert d.generation == gen + 1, "drop_node must bump generation"
-            gen = d.generation
-            if node is not None:
-                assert node.detached == 1
+            nodes = alive.pop(name, None)
+            for i, d in enumerate(dirs):
+                d.drop_node(name)
+                assert d.generation == gens[i] + 1, \
+                    "drop_node must bump generation"
+                gens[i] = d.generation
+            if nodes is not None:
+                assert all(n.detached == 1 for n in nodes)
             placements = {kn: t for kn, t in placements.items()
                           if kn[1] != name}
             shards = {kin: t for kin, t in shards.items() if kin[2] != name}
         elif kind == "publish":
-            d.publish(name, key, tier)
+            for d in dirs:
+                d.publish(name, key, tier)
             if name in alive:  # hints for dead nodes must be ignored
                 placements.setdefault((key, name), set()).add(tier)
         elif kind == "withdraw":
-            d.withdraw(name, key, tier)
+            for d in dirs:
+                d.withdraw(name, key, tier)
             tiers = placements.get((key, name))
             if tiers is not None:
                 tiers.discard(tier)
                 if not tiers:
                     del placements[(key, name)]
         elif kind == "publish_shard":
-            d.publish_shard(name, key, index, tier)
+            for d in dirs:
+                d.publish_shard(name, key, index, tier)
             if name in alive:
                 shards.setdefault((key, index, name), set()).add(tier)
         elif kind == "withdraw_shard":
-            d.withdraw_shard(name, key, index, tier)
+            for d in dirs:
+                d.withdraw_shard(name, key, index, tier)
             tiers = shards.get((key, index, name))
             if tiers is not None:
                 tiers.discard(tier)
                 if not tiers:
                     del shards[(key, index, name)]
-        assert d.generation == gen, "only drop_node moves the generation"
+        for i, d in enumerate(dirs):
+            assert d.generation == gens[i], \
+                "only drop_node moves the generation"
         # D1: every view matches the reference model exactly
         for k in KEYS:
             expect = {n: _warmest(t) for (kk, n), t in placements.items()
                       if kk == k and t}
-            got = dict(d.holders(k))
-            assert got == expect
-            assert set(got) <= set(alive)
-            for n in NAMES:
-                assert d.tier_on(k, n) == expect.get(n)
+            for d in dirs:
+                got = dict(d.holders(k))
+                assert got == expect
+                assert set(got) <= set(alive)
+                for n in NAMES:
+                    assert d.tier_on(k, n) == expect.get(n)
+                for i in range(4):
+                    sexpect = {n: _warmest(t)
+                               for (kk, ii, n), t in shards.items()
+                               if kk == k and ii == i and t}
+                    sgot = dict(d.shard_holders(k, i))
+                    assert sgot == sexpect
+                    assert set(sgot) <= set(alive)
+                for n in NAMES:
+                    assert d.shards_on(k, n) == sorted(
+                        i for (kk, i, nn) in shards if kk == k and nn == n)
+            # D4: the impls agree exactly, answer order included
             for i in range(4):
-                sexpect = {n: _warmest(t)
-                           for (kk, ii, n), t in shards.items()
-                           if kk == k and ii == i and t}
-                sgot = dict(d.shard_holders(k, i))
-                assert sgot == sexpect
-                assert set(sgot) <= set(alive)
-            for n in NAMES:
-                assert d.shards_on(k, n) == sorted(
-                    i for (kk, i, nn) in shards if kk == k and nn == n)
+                assert dirs[0].shard_holders(k, i) == \
+                    dirs[1].shard_holders(k, i)
+            assert dirs[0].holders(k) == dirs[1].holders(k)
+            assert dirs[0].warmest(k) == dirs[1].warmest(k)
 
 
 def _random_ops(rng: random.Random, n: int):
@@ -156,8 +184,14 @@ def test_directory_interleavings_seeded(seed):
     _apply_directory_ops(_random_ops(rng, 80))
 
 
-def test_generation_bumps_only_on_drop():
-    d = ClusterDirectory()
+DIRECTORY_FACTORIES = [ClusterDirectory,
+                       lambda: ShardedClusterDirectory(n_shards=4)]
+DIRECTORY_IDS = ["single", "sharded"]
+
+
+@pytest.mark.parametrize("make", DIRECTORY_FACTORIES, ids=DIRECTORY_IDS)
+def test_generation_bumps_only_on_drop(make):
+    d = make()
     d.register(_FakeNode("n0"))
     g0 = d.generation
     d.publish("n0", KEYS[0], Tier.DISK)
@@ -170,8 +204,9 @@ def test_generation_bumps_only_on_drop():
     assert d.generation == g0 + 2
 
 
-def test_withdraw_shard_all_tiers():
-    d = ClusterDirectory()
+@pytest.mark.parametrize("make", DIRECTORY_FACTORIES, ids=DIRECTORY_IDS)
+def test_withdraw_shard_all_tiers(make):
+    d = make()
     d.register(_FakeNode("n0"))
     d.publish_shard("n0", KEYS[0], 1, Tier.DISK)
     d.publish_shard("n0", KEYS[0], 1, Tier.HOST)
@@ -180,12 +215,13 @@ def test_withdraw_shard_all_tiers():
     assert d.shards_on(KEYS[0], "n0") == []
 
 
-def test_concurrent_hints_and_drop_keep_invariants():
+@pytest.mark.parametrize("make", DIRECTORY_FACTORIES, ids=DIRECTORY_IDS)
+def test_concurrent_hints_and_drop_keep_invariants(make):
     """Racing publishers against drop_node: whatever the interleaving,
     dropped nodes end (and stay) absent from every view, and no
     operation crashes. Non-deterministic scheduling is the point — the
-    invariant must hold for all of them."""
-    d = ClusterDirectory()
+    invariant must hold for all of them (per-shard locks included)."""
+    d = make()
     for name in NAMES:
         d.register(_FakeNode(name))
     stop = threading.Event()
@@ -223,6 +259,93 @@ def test_concurrent_hints_and_drop_keep_invariants():
         assert set(dict(d.holders(k))) <= {"n0"}
         for i in range(4):
             assert set(dict(d.shard_holders(k, i))) <= {"n0"}
+
+
+# ----------------------------------------------------- hot-key owner failover
+MB = 1 << 20
+GATHER_SHARD = 256 << 10  # 2 MB model -> 8 shards, scattered over 2 owners
+
+
+def _gather_tensors(nbytes=2 * MB, n=8, seed=0):
+    rng = np.random.default_rng(seed)
+    per = nbytes // n // 4
+    return {f"w{i}": rng.standard_normal(per).astype(np.float32)
+            for i in range(n)}
+
+
+def _drive_owner_failover(policy: str, victim_idx: int,
+                          drop_after: int) -> None:
+    """D5 driver: a REAL cluster gathers a scattered model while the
+    ``drop_after``-th shard fetch drops one of the two shard owners.
+    Whatever the interleaving, the open completes digest-correct, the
+    dead node vanishes from every directory answer, and — whenever the
+    victim still owned pending shards — the in-flight plan re-validated
+    against the generation epoch and re-planned them onto CLOUD instead
+    of charging the dead link (PR-5 contract, now over either directory
+    policy)."""
+    with tempfile.TemporaryDirectory() as tmp:
+        obj = ObjectStore(f"{tmp}/cloud", shard_bytes=GATHER_SHARD)
+        key = ModelKey("jax", "big", "1")
+        tensors = _gather_tensors()
+        obj.put(key, tensors)
+        cluster = Cluster(objectstore=obj, directory=policy)
+        for i in range(3):
+            cluster.add_node(
+                f"node{i}",
+                MRM(DiskStore(f"{tmp}/disk{i}"), device_capacity=64 * MB,
+                    host_capacity=256 * MB, hw=HardwareModel()))
+        cluster.scatter(key, node_names=["node1", "node2"])
+        victim = f"node{victim_idx}"
+        n0 = cluster.node("node0")
+        real = n0._fetch_one_shard
+        state = {"fetched": 0, "dropped": False}
+
+        def dying_fetch(k, st, row, plan_gen, loads):
+            data = real(k, st, row, plan_gen, loads)
+            state["fetched"] += 1
+            if state["fetched"] == drop_after and not state["dropped"]:
+                state["dropped"] = True
+                cluster.directory.drop_node(victim)
+            return data
+
+        n0._fetch_one_shard = dying_fetch
+        h = n0.mrm.open(key)
+        stats = n0.stats()
+        assert h.timings.tier_hit == "gather"
+        assert state["dropped"]
+        n_shards = len(obj.shard_table(key))
+        assert victim not in dict(cluster.directory.holders(key))
+        for i in range(n_shards):
+            assert victim not in dict(cluster.directory.shard_holders(key, i))
+        # the victim owns half the shards; dropping it before it could
+        # have served them all forces >= 1 re-planned, CLOUD-absorbed shard
+        if drop_after <= n_shards // 2 - 1:
+            assert stats["plan_replans"] >= 1, "dead link must never be charged"
+            assert stats["shards_from_cloud"] >= 1
+        np.testing.assert_array_equal(np.asarray(h.weights["w0"]),
+                                      tensors["w0"])
+        with open(n0.mrm.disk.path_for(key), "rb") as f:
+            assert hashlib.sha256(f.read()).hexdigest() == \
+                obj.stat(key)["digest"]
+        n0.mrm.close(h)
+
+
+if HAVE_HYPOTHESIS:
+
+    @pytest.mark.parametrize("policy", ["single", "sharded"])
+    @given(victim_idx=st.sampled_from([1, 2]), drop_after=st.integers(1, 8))
+    @settings(max_examples=6, deadline=None)
+    def test_owner_failover_property(policy, victim_idx, drop_after):
+        _drive_owner_failover(policy, victim_idx, drop_after)
+
+
+@pytest.mark.parametrize("policy", ["single", "sharded"])
+@pytest.mark.parametrize("victim_idx,drop_after",
+                         [(1, 1), (2, 1), (1, 3), (2, 6)])
+def test_owner_failover_seeded(policy, victim_idx, drop_after):
+    """The hypothesis property above on fixed points, so D5 stays
+    enforced (deterministically) even without hypothesis."""
+    _drive_owner_failover(policy, victim_idx, drop_after)
 
 
 # ----------------------------------------------------- real-cluster residency

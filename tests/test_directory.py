@@ -1,0 +1,328 @@
+"""Sharded directory scale-out: ring, shard views, anti-entropy
+(DESIGN.md §10).
+
+Covers :class:`HashRing` ownership/stability, the sharded directory's
+hint semantics against the single-map baseline (the differential oracle
+that gates the refactor), and the replication machinery: two peer views
+of one logical directory reconciling divergent state through
+``sync_with`` after partitions, drops and re-registrations — with the
+no-resurrection guarantees (stale hints never bring back a dropped node,
+a re-registered node's old incarnation stays dead).
+"""
+import random
+
+import pytest
+
+from repro.core import (ClusterDirectory, HashRing, ModelKey,
+                        ShardedClusterDirectory, Tier, make_directory)
+from repro.core.directory import _key_token
+
+KEYS = [ModelKey("jax", f"m{i}") for i in range(40)]
+TIERS = [Tier.DEVICE, Tier.HOST, Tier.DISK]
+
+
+class _FakeNode:
+    def __init__(self, name):
+        self.name = name
+        self.detached = 0
+
+    def detach(self):
+        self.detached += 1
+
+
+def _sharded(n_shards=8, **kw):
+    d = ShardedClusterDirectory(n_shards=n_shards, **kw)
+    return d
+
+
+# ------------------------------------------------------------------- HashRing
+class TestHashRing:
+    def test_ownership_is_stable_and_total(self):
+        ring = HashRing(range(8), vnodes=8)
+        owners = {k: ring.owner(_key_token(k)) for k in KEYS}
+        assert set(owners.values()) <= set(range(8))
+        again = HashRing(range(8), vnodes=8)
+        assert owners == {k: again.owner(_key_token(k)) for k in KEYS}
+
+    def test_remove_only_rehomes_owned_keys(self):
+        """The consistent-hashing property: dropping one shard moves only
+        the keys it owned; every other key keeps its owner."""
+        ring = HashRing(range(8), vnodes=8)
+        before = {k: ring.owner(_key_token(k)) for k in KEYS}
+        ring.remove(3)
+        assert 3 not in ring.shard_ids()
+        for k, owner in before.items():
+            if owner != 3:
+                assert ring.owner(_key_token(k)) == owner
+            else:
+                assert ring.owner(_key_token(k)) != 3
+
+    def test_vnodes_spread_load(self):
+        ring = HashRing(range(8), vnodes=8)
+        counts = {}
+        for i in range(2000):
+            sid = ring.owner(f"jax/model{i}@1")
+            counts[sid] = counts.get(sid, 0) + 1
+        assert len(counts) == 8          # every shard owns something
+        assert max(counts.values()) < 2000 * 0.5   # no shard owns half
+
+    def test_empty_ring_raises(self):
+        ring = HashRing(range(2), vnodes=4)
+        ring.remove(0)
+        ring.remove(1)
+        with pytest.raises(LookupError):
+            ring.owner("jax/m@1")
+
+
+# ------------------------------------------------------- factory + protocol
+def test_make_directory_policies():
+    assert isinstance(make_directory("single"), ClusterDirectory)
+    d = make_directory("sharded", n_shards=4)
+    assert isinstance(d, ShardedClusterDirectory) and d.n_shards == 4
+    with pytest.raises(ValueError):
+        make_directory("quorum")
+    with pytest.raises(ValueError):
+        ShardedClusterDirectory(n_shards=0)
+
+
+def test_cluster_accepts_policy_string(tmp_path):
+    from repro.core import Cluster
+    assert isinstance(Cluster(directory="sharded").directory,
+                      ShardedClusterDirectory)
+    assert isinstance(Cluster(directory="single").directory,
+                      ClusterDirectory)
+    assert isinstance(Cluster().directory, ClusterDirectory)
+
+
+# ------------------------------------------------- differential oracle (D4)
+def _random_trace(seed, n_ops=300, n_nodes=6):
+    """A seeded publish/withdraw/shard/drop/register trace over a key
+    space wide enough to touch many directory shards."""
+    rng = random.Random(seed)
+    names = [f"n{i}" for i in range(n_nodes)]
+    ops = []
+    for _ in range(n_ops):
+        kind = rng.choice(["register", "drop", "publish", "publish",
+                           "withdraw", "publish_shard", "withdraw_shard"])
+        ops.append((kind, rng.choice(names), rng.randrange(len(KEYS)),
+                    rng.randrange(3), rng.randrange(6)))
+    return ops
+
+
+def _replay(d, ops):
+    alive = set()
+    for kind, name, ki, ti, idx in ops:
+        key, tier = KEYS[ki], TIERS[ti]
+        if kind == "register":
+            if name in alive:
+                with pytest.raises(KeyError):
+                    d.register(_FakeNode(name))
+            else:
+                d.register(_FakeNode(name))
+                alive.add(name)
+        elif kind == "drop":
+            d.drop_node(name)
+            alive.discard(name)
+        elif kind == "publish":
+            d.publish(name, key, tier)
+        elif kind == "withdraw":
+            d.withdraw(name, key, tier)
+        elif kind == "publish_shard":
+            d.publish_shard(name, key, idx, tier)
+        elif kind == "withdraw_shard":
+            d.withdraw_shard(name, key, idx, tier)
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_single_vs_sharded_differential_oracle(seed):
+    """Satellite: one seeded event trace, both DirectoryProtocol impls,
+    identical resolvable placements afterwards — every holders /
+    shard_holders / tier_on / shards_on / warmest answer, order
+    included, plus the membership epoch."""
+    ops = _random_trace(seed)
+    single, sharded = ClusterDirectory(), _sharded()
+    _replay(single, ops)
+    _replay(sharded, ops)
+    assert single.generation == sharded.generation
+    for key in KEYS:
+        assert single.holders(key) == sharded.holders(key)
+        assert single.warmest(key) == sharded.warmest(key)
+        for i in range(6):
+            assert single.shard_holders(key, i) == sharded.shard_holders(key, i)
+        for name in [f"n{i}" for i in range(6)]:
+            assert single.tier_on(key, name) == sharded.tier_on(key, name)
+            assert single.shards_on(key, name) == sharded.shards_on(key, name)
+    s1, s2 = single.stats(), sharded.stats()
+    for field in ("models", "nodes", "placements", "shard_placements",
+                  "generation"):
+        assert s1[field] == s2[field]
+
+
+# --------------------------------------------------------- sharded semantics
+def test_generation_of_tracks_owning_shard_only():
+    d = _sharded()
+    d.register(_FakeNode("a"))
+    d.register(_FakeNode("b"))
+    key = KEYS[0]
+    g_key = d.generation_of(key)
+    g_all = d.generation
+    d.drop_node("a")  # a global drop touches every shard
+    assert d.generation == g_all + 1
+    assert d.generation_of(key) == g_key + 1
+
+
+def test_reregister_is_new_incarnation():
+    """A node that drops and comes back must not inherit its old hints."""
+    d = _sharded()
+    d.register(_FakeNode("a"))
+    d.publish("a", KEYS[0], Tier.DISK)
+    d.drop_node("a")
+    assert d.holders(KEYS[0]) == []
+    d.register(_FakeNode("a"))          # fresh incarnation
+    assert d.holders(KEYS[0]) == []     # old hints stay dead
+    d.publish("a", KEYS[0], Tier.HOST)
+    assert d.holders(KEYS[0]) == [("a", Tier.HOST)]
+
+
+def test_shard_ops_accounting():
+    d = _sharded(n_shards=4)
+    d.register(_FakeNode("a"))
+    for key in KEYS[:12]:
+        d.publish("a", key, Tier.DISK)
+        d.holders(key)
+    ops = d.shard_ops()
+    assert len(ops) == 4 and sum(ops) >= 24
+
+
+# ------------------------------------------------------- anti-entropy (§10)
+def _two_views(n_shards=8):
+    """Two replica views of one logical directory, each registering the
+    same members (write-through membership; placement hints diverge)."""
+    a, b = _sharded(n_shards, name="viewA"), _sharded(n_shards, name="viewB")
+    for name in ("n0", "n1", "n2"):
+        a.register(_FakeNode(name))
+        b.register(_FakeNode(name))
+    return a, b
+
+
+def _answers(d, n_indices=4):
+    return {
+        "holders": {k: d.holders(k) for k in KEYS},
+        "shards": {(k, i): d.shard_holders(k, i)
+                   for k in KEYS for i in range(n_indices)},
+    }
+
+
+class TestAntiEntropy:
+    def test_partition_heals_within_bounded_rounds(self):
+        """Satellite: writes land on only one view during the partition;
+        after the heal, both views answer identically within <= 2 sync
+        rounds (pairwise anti-entropy converges in one — the bound
+        leaves room for the membership round trip)."""
+        a, b = _two_views()
+        rng = random.Random(0)
+        # partitioned phase: A and B each take disjoint write streams
+        for i, key in enumerate(KEYS):
+            view = a if i % 2 == 0 else b
+            view.publish(f"n{i % 3}", key, TIERS[rng.randrange(3)])
+            view.publish_shard(f"n{(i + 1) % 3}", key, i % 4,
+                               TIERS[rng.randrange(3)])
+        assert _answers(a) != _answers(b)
+        rounds = 0
+        while _answers(a) != _answers(b):
+            rounds += 1
+            assert rounds <= 2, "anti-entropy must converge in <= 2 rounds"
+            a.sync_with(b)
+        assert _answers(a) == _answers(b)
+        assert a.stats()["sync_rounds"] >= 1
+        # idempotent once converged: another round exchanges ~nothing new
+        assert a.sync_with(b) == 0
+
+    def test_sync_never_resurrects_dropped_node(self):
+        """Satellite: view B still carries hints for a node view A
+        dropped; the sync must kill B's stale hints, not revive them on
+        A — in both directions, whatever the sync order."""
+        a, b = _two_views()
+        for key in KEYS[:8]:
+            a.publish("n1", key, Tier.DISK)
+            b.publish("n1", key, Tier.DISK)
+        a.drop_node("n1")     # membership tombstone on A only
+        assert a.holders(KEYS[0]) == []
+        a.sync_with(b)
+        for key in KEYS[:8]:
+            assert "n1" not in dict(a.holders(key))
+            assert "n1" not in dict(b.holders(key))
+        assert b.node("n1") is None
+        # late stale publish on B after the tombstone propagated: ignored
+        b.publish("n1", KEYS[0], Tier.HOST)
+        assert b.holders(KEYS[0]) == []
+
+    def test_sync_kills_old_incarnation_but_keeps_new(self):
+        """Drop + re-register on A while B is partitioned: after the
+        heal, hints of the OLD incarnation die everywhere while hints
+        the NEW incarnation published survive."""
+        a, b = _two_views()
+        b.publish("n0", KEYS[0], Tier.DISK)   # old incarnation, B's view
+        a.drop_node("n0")
+        a.register(_FakeNode("n0"))           # new incarnation on A
+        a.publish("n0", KEYS[1], Tier.HOST)   # written by the new one
+        a.sync_with(b)
+        for d in (a, b):
+            assert d.holders(KEYS[0]) == []                    # old: dead
+            assert d.holders(KEYS[1]) == [("n0", Tier.HOST)]   # new: alive
+        assert a.generation == b.generation
+
+    def test_withdraw_tombstone_propagates(self):
+        """An emptied-out record must out-version the peer's stale copy:
+        publish syncs over, then a withdraw on the origin view syncs the
+        removal over too (no resurrection from B's older record)."""
+        a, b = _two_views()
+        a.publish("n0", KEYS[0], Tier.DISK)
+        a.sync_with(b)
+        assert b.holders(KEYS[0]) == [("n0", Tier.DISK)]
+        a.withdraw("n0", KEYS[0], Tier.DISK)
+        a.sync_with(b)
+        assert a.holders(KEYS[0]) == []
+        assert b.holders(KEYS[0]) == []
+
+    def test_partial_partition_syncs_selected_shards_only(self):
+        """``shard_ids`` limits the round to a subset — the partial
+        partition the fleet simulator injects."""
+        a, b = _two_views(n_shards=4)
+        for key in KEYS:
+            a.publish("n0", key, Tier.DISK)
+        synced = {0, 1}
+        a.sync_with(b, shard_ids=synced)
+        for key in KEYS:
+            sid = a.shard_of(key)
+            want = [("n0", Tier.DISK)] if sid in synced else []
+            assert b.holders(key) == want
+        a.sync_with(b)  # full round finishes the job
+        assert _answers(a) == _answers(b)
+
+    def test_membership_epoch_converges_to_max(self):
+        a, b = _two_views()
+        a.drop_node("n1")
+        a.drop_node("n2")
+        b.drop_node("n2")
+        assert a.generation == 2 and b.generation == 1
+        a.sync_with(b)
+        assert a.generation == b.generation == 2
+
+    def test_sync_requires_same_shard_count(self):
+        a = _sharded(n_shards=4)
+        b = _sharded(n_shards=8)
+        with pytest.raises(ValueError):
+            a.sync_with(b)
+
+    def test_concurrent_tie_unions_then_converges(self):
+        """Two views that somehow hold the exact same (ver, inc) for a
+        record with different tier sets resolve by union — the only
+        commutative choice — so a third round changes nothing."""
+        a, b = _two_views(n_shards=1)
+        a.publish("n0", KEYS[0], Tier.DISK)
+        b.publish("n0", KEYS[0], Tier.HOST)  # same lamport ver on both sides
+        a.sync_with(b)
+        assert dict(a.holders(KEYS[0])) == dict(b.holders(KEYS[0]))
+        assert a.tier_on(KEYS[0], "n0") == Tier.HOST  # warmest of the union
+        assert a.sync_with(b) == 0

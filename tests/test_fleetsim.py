@@ -1,0 +1,135 @@
+"""Virtual-clock fleet simulator (DESIGN.md §10).
+
+The simulator is itself test machinery, so these tests pin down the
+properties the bench relies on: the seeded trace is identical across
+directory policies (A/B comparability), a full run is deterministic,
+mis-fetches are *measured* against the simulated truth (zero without
+faults, counted once per stale probe with faults), the fault injectors
+do what they claim (flood -> stale probes, partition -> divergence that
+anti-entropy repairs, owner kill -> interrupted gathers that all
+complete via re-plan, with the failover clock measured), and the
+directory-op queues that produce the throughput numbers are charged.
+
+Small fleets keep the suite fast; bench_fleet.py runs the 100-node
+configuration with the acceptance thresholds.
+"""
+from dataclasses import replace
+
+import pytest
+
+from repro.core.fleetsim import (DEFAULT_FAULTS, Fault, FleetConfig,
+                                 FleetSim, compare_policies)
+
+# 5 virtual seconds of a 20-node fleet: fast enough for -m "not slow"
+SMALL = FleetConfig(n_nodes=20, n_models=20, n_sharded=2, data_shards=4,
+                    n_requests=1500, rate_rps=300.0, node_capacity=4,
+                    n_dir_shards=8, directory="sharded", faults=())
+
+FAULTS_SMALL = (
+    Fault("stale_flood", at_s=1.0, count=40),
+    Fault("partition", at_s=2.0, duration_s=1.0),
+    Fault("kill_hot_owner", at_s=3.5),
+    Fault("churn", at_s=4.2),
+)
+
+
+def test_trace_identical_across_policies():
+    """The arrival trace is a pure function of the workload config —
+    byte-identical whatever directory serves it."""
+    a = FleetSim(replace(SMALL, directory="single")).trace()
+    b = FleetSim(replace(SMALL, directory="sharded")).trace()
+    assert a == b
+    assert len(a) == SMALL.n_requests
+    assert all(t1 <= t2 for (t1, _, _), (t2, _, _) in zip(a, a[1:]))
+
+
+def test_run_is_deterministic():
+    r1 = FleetSim(replace(SMALL, faults=FAULTS_SMALL)).run()
+    r2 = FleetSim(replace(SMALL, faults=FAULTS_SMALL)).run()
+    assert r1 == r2
+
+
+def test_no_faults_no_misfetch():
+    """Write-through to every reachable view means staleness — and so
+    mis-fetches — only come from faults."""
+    r = FleetSim(SMALL).run()
+    assert r["misfetches"] == 0 and r["misfetch_rate"] == 0.0
+    assert r["views_agree"]
+    assert r["opens"] == r["warm_hits"] + r["cold_opens"]
+    assert r["gathers_completed"] == r["gathers_started"]
+    assert r["gathers_failed"] == 0 and r["gathers_outstanding"] == 0
+    assert r["dir_ops"] > 0 and r["dir_busy_max_s"] > 0
+
+
+def test_open_accounting_matches_across_policies():
+    """Without partitions both directories resolve the same placements,
+    so the caches evolve identically: same hits, same cold opens."""
+    reports = compare_policies(SMALL)
+    s, sh = reports["single"], reports["sharded"]
+    for field in ("opens", "warm_hits", "cold_opens"):
+        assert s[field] == sh[field]
+    assert s["n_views"] == 1 and sh["n_views"] >= 2
+    # striping the op stream over per-shard queues must beat one queue
+    assert sh["dir_throughput_ops_s"] > s["dir_throughput_ops_s"]
+    assert sh["shard_balance"] >= 1.0
+
+
+def test_stale_flood_measured_as_misfetches():
+    r = FleetSim(replace(
+        SMALL, faults=(Fault("stale_flood", at_s=1.0, count=40),))).run()
+    assert r["flood_hints"] > 0
+    assert 0 < r["misfetches"] <= 2 * r["flood_hints"]  # <= once per view
+    assert r["corrective_withdraws"] == r["misfetches"]
+    assert r["views_agree"]  # anti-entropy + corrections still converge
+
+
+def test_partition_diverges_then_reconciles():
+    r = FleetSim(replace(
+        SMALL, faults=(Fault("partition", at_s=1.0, duration_s=1.5),))).run()
+    assert r["misfetches"] > 0          # divergence was actually observed
+    assert r["views_agree"]             # ...and anti-entropy repaired it
+    base = FleetSim(SMALL).run()
+    assert r["sync_rounds"] < base["sync_rounds"]  # rounds were skipped
+
+
+def test_owner_kill_interrupts_and_replans_gathers():
+    r = FleetSim(replace(
+        SMALL, faults=(Fault("kill_hot_owner", at_s=3.0),))).run()
+    assert r["drops"] == 1
+    assert r["gathers_interrupted"] >= 1
+    assert r["gathers_replanned"] >= r["gathers_interrupted"]
+    assert r["gathers_completed"] == r["gathers_started"]  # none lost
+    assert r["gathers_failed"] == 0
+    assert r["failover_s"] is not None and r["failover_s"] >= 0
+    assert r["hot_reopen_s"] is not None and r["hot_reopen_s"] >= 0
+    assert r["views_agree"]
+
+
+def test_single_view_failover_is_instant():
+    """One map, one view: the drop purges everything at once, so the
+    hot key is clean the moment the failure is reported — the baseline
+    the sharded failover time is compared against."""
+    r = FleetSim(replace(SMALL, directory="single",
+                         faults=(Fault("kill_hot_owner", at_s=3.0),))).run()
+    assert r["failover_s"] == 0.0
+    assert r["gathers_completed"] == r["gathers_started"]
+
+
+def test_churn_drops_a_node():
+    r = FleetSim(replace(
+        SMALL, faults=(Fault("churn", at_s=2.0),))).run()
+    assert r["drops"] == 1
+    assert r["views_agree"]
+
+
+def test_default_fault_plan_runs_clean():
+    r = FleetSim(replace(SMALL, faults=DEFAULT_FAULTS,
+                         n_requests=4000, rate_rps=300.0)).run()
+    assert r["drops"] == 2
+    assert r["gathers_completed"] == r["gathers_started"]
+    assert r["views_agree"]
+
+
+def test_unknown_fault_kind_raises():
+    with pytest.raises(ValueError):
+        FleetSim(replace(SMALL, faults=(Fault("meteor", at_s=1.0),))).run()
