@@ -126,6 +126,17 @@ def main() -> None:
                 f"failover_s={f_shard['failover_s']:.3f};"
                 f"replans={f_shard['gathers_replanned']}"))
 
+    print("== rpc: real multi-process cluster over sockets ==", flush=True)
+    from benchmarks import bench_rpc
+    rows_r = bench_rpc.run(smoke=not args.full, verbose=True)
+    by_phase = {r["phase"]: r for r in rows_r}
+    cold = by_phase["cold_pull"]
+    out.append(("rpc_cluster", 1e6 * cold["wire_s"],
+                f"measured_bw_mib_s={cold['measured_bw_mib_s']:.0f};"
+                f"gather_shards={by_phase['gather']['n_shards']};"
+                f"kill9_recover_s={by_phase['kill9_midgather']['recover_s']:.2f};"
+                f"phases_ok={sum(1 for r in rows_r if r['ok'])}"))
+
     print("== compression: codec x ratio x link bw ==", flush=True)
     from benchmarks import bench_compression
     rows_z = bench_compression.run(smoke=not args.full, verbose=True)

@@ -39,7 +39,14 @@ REQUIRED_CONTENT = [
     ("DESIGN.md", "Sharded directory & the fleet simulator"),
     ("DESIGN.md", "anti-entropy"),
     ("DESIGN.md", "consistent-hash"),
+    ("DESIGN.md", "Transport layer & the node daemon"),
+    ("DESIGN.md", "Measured wire time"),
+    ("DESIGN.md", "observe_wire"),
     (os.path.join("docs", "API.md"), "ClusterDirectory"),
+    (os.path.join("docs", "API.md"), "SocketTransport"),
+    (os.path.join("docs", "API.md"), "NodeDaemon"),
+    (os.path.join("docs", "API.md"), "PeerStub"),
+    (os.path.join("docs", "API.md"), "spawn_node"),
     (os.path.join("docs", "API.md"), "shard_bytes"),
     (os.path.join("docs", "API.md"), "fetch_shard"),
     (os.path.join("docs", "API.md"), "gather_time"),

@@ -42,6 +42,11 @@ if [[ "${1:-}" == "--fast" ]]; then
     # reconcile (asserted inside the benchmark; the 100-node throughput
     # and mis-fetch thresholds run in the full bench)
     python -m benchmarks.bench_fleet --smoke
+    # real multi-process cluster (DESIGN.md §11): 3 noded daemons over
+    # sockets — cold pull + gather with sha256-identical bytes and
+    # measured wire seconds, then kill -9 of a serving daemon mid-gather
+    # with both opens still completing (asserted inside the benchmark)
+    python -m benchmarks.bench_rpc --smoke
 else
     # coverage gate for the paper-core package (full mode only): enforced
     # whenever pytest-cov is importable; the floor tracks the suite, so
@@ -52,6 +57,7 @@ else
         # package split keeps them gated
         ARGS+=(--cov=repro.core --cov=repro.core.layerplan
                --cov=repro.core.directory --cov=repro.core.fleetsim
+               --cov=repro.core.transport --cov=repro.core.noded
                --cov-fail-under=70)
     else
         echo "ci.sh: pytest-cov not installed - skipping the coverage gate"

@@ -28,6 +28,10 @@ from repro.core.objectstore import ObjectStore  # noqa: F401
 from repro.core.mrm import (  # noqa: F401
     LoadFuture, MRM, ModelHandle, ModelKey, OpenTimings,
 )
+# repro.core.noded (NodeDaemon, PeerStub, DirectoryClient, spawn_node) is
+# intentionally NOT re-exported: it is the `python -m repro.core.noded`
+# entry point, and importing it here would shadow runpy's execution of
+# the module in every spawned daemon (RuntimeWarning + double import)
 from repro.core.pipeline import (  # noqa: F401
     PipelineReport, plan_chunks, run_pipeline,
 )
@@ -36,3 +40,7 @@ from repro.core.slo import (  # noqa: F401
     NextUsePredictor, ReloadCostEstimator, SLOState,
 )
 from repro.core.store import CloudStore, DiskStore, ModelFile, write_model  # noqa: F401
+from repro.core.transport import (  # noqa: F401
+    LoopbackTransport, RemoteError, SocketServer, SocketTransport,
+    TransportError,
+)

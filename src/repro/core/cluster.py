@@ -25,8 +25,8 @@ from __future__ import annotations
 
 import hashlib
 import os
-import shutil
 import threading
+import time
 from typing import Dict, List, Optional, Set, Tuple
 
 from repro.core.cache import Tier
@@ -229,14 +229,23 @@ class ClusterNode:
     gather (§8), and the CLOUD tier.
     """
 
+    #: in-process peers keep modeled link times; ``noded.PeerStub`` (the
+    #: same surface over a socket) sets True and its reads are *measured*
+    remote = False
+
     def __init__(self, name: str, mrm: MRM,
                  directory: "ClusterDirectory",  # any DirectoryProtocol impl
                  peer_fetch: bool = True,
                  peer_codec=None,  # codec name or a tuned Codec instance
-                 gather: bool = True):
+                 gather: bool = True,
+                 address: Optional[str] = None):
         self.name = name
         self.mrm = mrm
         self.directory = directory
+        # transport address peers reach this node's daemon at (None for
+        # purely in-process clusters); carried through directory
+        # registration so remote planners can build PeerStubs
+        self.address = address
         self.hw = mrm.hw
         self.peer_fetch_enabled = peer_fetch
         self.gather_enabled = gather
@@ -311,6 +320,71 @@ class ClusterNode:
         if t is not None:
             return t
         return Tier.DISK if self.mrm.disk.contains(key) else None
+
+    # -- peer data-plane surface (DESIGN.md §11) ------------------------------
+    # The narrow surface peers consume: ClusterNode serves it in-process,
+    # and ``noded.PeerStub`` carries the identical surface over a
+    # transport — so ``_pull_from_peer``, ``plan_shard_sources``, and the
+    # gather's shard reads run unmodified against either.
+    def has_model(self, key: ModelKey) -> bool:
+        """Whole-model copy on this peer's local disk (hint verification)."""
+        return self.mrm.disk.contains(ModelKey(*key))
+
+    def model_nbytes(self, key: ModelKey) -> Optional[int]:
+        """Size of the peer's whole-model copy, None when absent."""
+        try:
+            return os.path.getsize(self.mrm.disk.path_for(ModelKey(*key)))
+        except OSError:
+            return None
+
+    def local_model_path(self, key: ModelKey) -> Optional[str]:
+        """Filesystem path of the peer's copy — in-process-only escape
+        hatch for the compressed peer wire (which reads the source file
+        directly) and ratio sampling. Remote peers return None; their
+        transfers stream raw chunks instead."""
+        key = ModelKey(*key)
+        path = self.mrm.disk.path_for(key)
+        return path if os.path.exists(path) else None
+
+    def read_model(self, key: ModelKey, write,
+                   chunk_bytes: int = 4 << 20) -> int:
+        """Serve the whole model file into ``write(bytes)`` chunk by
+        chunk; returns the byte count. One ``peer_serves``."""
+        key = ModelKey(*key)
+        total = 0
+        with open(self.mrm.disk.path_for(key), "rb") as f:
+            while True:
+                chunk = f.read(chunk_bytes)
+                if not chunk:
+                    break
+                write(chunk)
+                total += len(chunk)
+        self._note_serve("peer_serves")
+        return total
+
+    def read_model_ranges(self, key: ModelKey, ranges) -> bytes:
+        """Serve byte ranges sliced out of the whole-model file (a
+        shard's ranges, or a layer window). One ``shard_serves``."""
+        key = ModelKey(*key)
+        parts = []
+        with open(self.mrm.disk.path_for(key), "rb") as f:
+            for ro, rn in ranges:
+                f.seek(ro)
+                parts.append(f.read(rn))
+        self._note_serve("shard_serves")
+        return b"".join(parts)
+
+    def read_shard(self, key: ModelKey, index: int) -> bytes:
+        """Serve one shard-cache copy. One ``shard_serves``."""
+        key = ModelKey(*key)
+        with open(self._shard_path(key, index), "rb") as f:
+            data = f.read()
+        self._note_serve("shard_serves")
+        return data
+
+    def _note_serve(self, counter: str) -> None:
+        with self._metrics_lock:
+            self.metrics[counter] += 1
 
     # -- local shard cache (§8) ----------------------------------------------
     def _shard_path(self, key: ModelKey, index: int) -> str:
@@ -395,13 +469,14 @@ class ClusterNode:
             os.rmdir(d)
 
     # -- peer-to-peer fetch ---------------------------------------------------
-    def _wire_ratio(self, key: ModelKey, src_path: str) -> float:
+    def _wire_ratio(self, key: ModelKey, peer) -> float:
         """Estimated compression ratio for the peer wire: the CLOUD
         manifest's real stored size when it recorded the SAME codec this
         wire uses (a different codec's ratio would distort the compare),
         else a one-chunk compression sample of the peer's file, memoized
         per key (content is version-keyed and immutable). 1.0 when the
-        node has no wire codec."""
+        node has no wire codec or the peer exposes no local file to
+        sample (a remote PeerStub)."""
         if self.peer_codec is None:
             return 1.0
         obj = self.mrm.objectstore
@@ -411,6 +486,9 @@ class ClusterNode:
                 return max(1.0, st["nbytes"] / max(1, st["stored_nbytes"]))
         ratio = self._ratio_cache.get(key)
         if ratio is None:
+            src_path = peer.local_model_path(key)
+            if src_path is None:
+                return 1.0
             ratio = sample_ratio(src_path, self._peer_codec)
             self._ratio_cache[key] = ratio
         return ratio
@@ -420,18 +498,24 @@ class ClusterNode:
         best = None
         for node_name, tier in self.directory.holders(key, exclude=self.name):
             peer = self.directory.node(node_name)
-            if peer is None or not peer.mrm.disk.contains(key):
+            if peer is None or not peer.has_model(key):
                 continue  # stale hint — skip, CLOUD fall-through covers us
-            path = peer.mrm.disk.path_for(key)
-            nbytes = os.path.getsize(path)
-            ratio = self._wire_ratio(key, path)
+            nbytes = peer.model_nbytes(key)
+            if nbytes is None:
+                continue  # vanished between the two probes: stale hint
             peer_disk = tier == Tier.DISK
-            # a node with a wire codec still sends raw when that is cheaper
-            # (fast links make the compress stage the max-stage)
             t_raw = self.hw.peer_fetch_time(nbytes, peer_disk=peer_disk)
-            t_comp = self.hw.peer_fetch_time(nbytes, peer_disk=peer_disk,
-                                             ratio=ratio)
-            t, use_ratio = min((t_raw, 1.0), (t_comp, ratio))
+            t, use_ratio = t_raw, 1.0
+            if not peer.remote:
+                # a node with a wire codec still sends raw when that is
+                # cheaper (fast links make the compress stage the
+                # max-stage); remote peers always stream raw — the
+                # compressed wire needs the source file in-process
+                ratio = self._wire_ratio(key, peer)
+                t_comp = self.hw.peer_fetch_time(nbytes,
+                                                 peer_disk=peer_disk,
+                                                 ratio=ratio)
+                t, use_ratio = min((t_raw, 1.0), (t_comp, ratio))
             if best is None or t < best[2]:
                 best = (peer, tier, t, nbytes, use_ratio)
         return best
@@ -500,16 +584,18 @@ class ClusterNode:
                         ratio: float, timings, plan_gen: int) -> bool:
         """Execute a planned single-source peer transfer. Returns False —
         without charging the link — when the plan went stale mid-flight
-        (the peer left the cluster after ``plan_gen``, or its copy
-        vanished); the caller re-plans."""
-        src = peer.mrm.disk.path_for(key)
+        (the peer left the cluster after ``plan_gen``, its copy vanished,
+        or its daemon died/hung: every transport failure is an OSError);
+        the caller re-plans."""
         dst = self.mrm.disk.path_for(key)
+        wire_seconds = 0.0
         try:
             # unique temp name: concurrent fetches of one key must not
             # share a staging file (the loser's replace would raise) —
             # last writer wins
             with atomic_dest_file(dst, prefix=".peer-") as (fd, tmp):
-                if ratio > 1.0:
+                src = peer.local_model_path(key) if ratio > 1.0 else None
+                if src is not None:
                     wire_bytes, report = self._transfer_compressed(src, fd)
                     timings.decompress_s += report.stage("decompress").busy_s
                     timings.stage_overlap_s += report.overlap_s()
@@ -517,9 +603,18 @@ class ClusterNode:
                     peer_s = self.hw.peer_fetch_time(
                         nbytes, peer_disk=peer_tier == Tier.DISK,
                         ratio=max(1.0, nbytes / max(1, wire_bytes)))
+                    peer._note_serve("peer_serves")
                 else:
-                    os.close(fd)
-                    shutil.copyfile(src, tmp)
+                    t0 = time.perf_counter()
+                    out = os.fdopen(fd, "wb")
+                    try:
+                        got = peer.read_model(key, out.write)
+                    finally:
+                        out.close()
+                    wire_seconds = time.perf_counter() - t0
+                    if got != nbytes:
+                        raise _StaleSourceError(
+                            f"{peer.name}: sent {got} of {nbytes} bytes")
                     wire_bytes = nbytes
                 # generation re-validation (§8 bugfix): a peer dropped
                 # after planning must not be charged as a live link — the
@@ -531,16 +626,21 @@ class ClusterNode:
             with self._metrics_lock:
                 self.metrics["plan_replans"] += 1
             return False
-        except FileNotFoundError:
-            # the peer's copy vanished mid-transfer (stale hint): re-plan
+        except OSError:
+            # the peer's copy vanished mid-transfer (stale hint), or the
+            # transport to its daemon failed/timed out: re-plan
             return False
         timings.peer_s = peer_s
+        if peer.remote:
+            # a socket carried these bytes: record the measured wire and
+            # feed the costmodel calibration (DESIGN.md §11)
+            timings.wire_s += wire_seconds
+            timings.wire_bytes += wire_bytes
+            self.hw.observe_wire("peer", wire_bytes, wire_seconds)
         with self._metrics_lock:
             self.metrics["peer_fetches"] += 1
             self.metrics["bytes_from_peers"] += nbytes
             self.metrics["bytes_on_wire"] += wire_bytes
-        with peer._metrics_lock:
-            peer.metrics["peer_serves"] += 1
         with self.mrm._lock:
             self.mrm.metrics["peer_fetches"] += 1
             self.mrm.metrics["modeled_fetch_s"] += peer_s
@@ -627,7 +727,7 @@ class ClusterNode:
         for name, tier in self.directory.holders(key, exclude=self.name):
             peer = self.directory.node(name)
             if (self.peer_fetch_enabled and peer is not None
-                    and peer.mrm.disk.contains(key)):
+                    and peer.has_model(key)):
                 full_holders.append((name, tier))
         load: Dict[tuple, float] = {}
         wire_bytes = 0  # bytes crossing the NIC (local shards are free)
@@ -671,28 +771,22 @@ class ClusterNode:
     def _read_peer_shard(self, peer: Optional["ClusterNode"],
                          key: ModelKey, st: dict, srow: dict) -> bytes:
         """Pull one shard from a peer — a slice of its whole-model file or
-        its shard-cache copy — digest-verified. Raises on stale hints and
-        corruption; the gather falls back to CLOUD."""
+        its shard-cache copy — digest-verified. Raises on stale hints,
+        transport failure, and corruption; the gather falls back to
+        CLOUD. Works against an in-process ClusterNode or a remote
+        PeerStub alike (the peer data-plane surface, DESIGN.md §11)."""
         if peer is None:
             raise _StaleSourceError("peer left the cluster")
-        if peer.mrm.disk.contains(key):
-            parts = []
-            with open(peer.mrm.disk.path_for(key), "rb") as f:
-                for ro, rn in shard_ranges(st, srow):
-                    f.seek(ro)
-                    parts.append(f.read(rn))
-            data = b"".join(parts)
+        if peer.has_model(key):
+            data = peer.read_model_ranges(key, shard_ranges(st, srow))
         elif peer.has_shard(key, srow["index"]):
-            with open(peer._shard_path(key, srow["index"]), "rb") as f:
-                data = f.read()
+            data = peer.read_shard(key, srow["index"])
         else:
             raise _StaleSourceError("stale shard hint")
         if (len(data) != srow["nbytes"]
                 or hashlib.sha256(data).hexdigest() != srow["digest"]):
             raise IOError(f"{key} shard {srow['index']}: "
                           f"corrupt copy on {peer.name}")
-        with peer._metrics_lock:
-            peer.metrics["shard_serves"] += 1
         return data
 
     def _fetch_one_shard(self, key: ModelKey, st: dict, row: dict,
@@ -729,9 +823,11 @@ class ClusterNode:
             self._forget_local_shard(key, row["index"])
             source = None
         if source == "peer":
+            peer = self.directory.node(node_name)
             try:
-                data = self._read_peer_shard(self.directory.node(node_name),
-                                             key, st, srow)
+                t0 = time.perf_counter()
+                data = self._read_peer_shard(peer, key, st, srow)
+                wire_seconds = time.perf_counter() - t0
                 with self._metrics_lock:
                     self.metrics["shards_from_peers"] += 1
                     self.metrics["bytes_from_peers"] += srow["nbytes"]
@@ -740,6 +836,13 @@ class ClusterNode:
                 loads[("peer", node_name)] = \
                     loads.get(("peer", node_name), 0.0) + row["modeled_s"]
                 acct["wire_bytes"] += srow["nbytes"]
+                if peer is not None and peer.remote:
+                    # real socket leg: measured per-transfer wire seconds
+                    # (DESIGN.md §11) feed the timings and the costmodel
+                    acct["wire_s"] += wire_seconds
+                    acct["wire_meas_bytes"] += srow["nbytes"]
+                    self.hw.observe_wire("peer", srow["nbytes"],
+                                         wire_seconds)
                 return data
             except (OSError, LookupError):
                 with self._metrics_lock:
@@ -811,7 +914,8 @@ class ClusterNode:
         if singles and min(singles) <= gather_s:
             return False
         dst = self.mrm.disk.path_for(key)
-        acct = {"loads": {}, "wire_bytes": 0}
+        acct = {"loads": {}, "wire_bytes": 0,
+                "wire_s": 0.0, "wire_meas_bytes": 0}
         try:
             with atomic_dest_file(dst, prefix=".gather-") as (fd, tmp):
                 try:
@@ -854,6 +958,8 @@ class ClusterNode:
         gather_s = self.hw.gather_time(acct["loads"].values(),
                                        acct["wire_bytes"])
         timings.gather_s = gather_s
+        timings.wire_s += acct["wire_s"]
+        timings.wire_bytes += acct["wire_meas_bytes"]
         timings.tier_hit = "gather"
         with self._metrics_lock:
             self.metrics["gather_fetches"] += 1

@@ -33,6 +33,9 @@ DIR_OP_S = 2e-6                # directory-shard service time per placement
                                # op (one guarded dict update — DESIGN.md §10)
 DIR_RTT = 200e-6               # client -> directory round trip (intra-DC)
 DIR_SYNC_ENTRY_S = 0.5e-6      # anti-entropy merge cost per record exchanged
+WIRE_EWMA_ALPHA = 0.3          # weight of each new measured-transfer sample
+MIN_WIRE_SAMPLE_BYTES = 256 << 10  # smaller transfers are RTT-dominated and
+                                   # would drag a bandwidth estimate to zero
 
 
 def pipelined_stage_time(stage_seconds, n_chunks: int,
@@ -101,6 +104,43 @@ class HardwareModel:
     dir_op_s: float = DIR_OP_S            # directory op service time (§10)
     dir_rtt: float = DIR_RTT              # client -> directory round trip
     dir_sync_entry_s: float = DIR_SYNC_ENTRY_S  # anti-entropy per-record cost
+
+    # -- measured-wire calibration (DESIGN.md §11) --------------------------
+    def observe_wire(self, kind: str, nbytes: int, seconds: float) -> None:
+        """Fold one *measured* transfer into the link model: EWMA the
+        observed bandwidth into ``peer_bw`` / ``cloud_bw`` so planning
+        (``peer_fetch_time``, ``pick_fetch_source``, gather LPT) prices
+        links at what the wire actually delivers instead of the datasheet
+        constant. Only socket transports call this — in-process transfers
+        keep the modeled constants. Tiny transfers are skipped (RTT
+        dominates; they carry no bandwidth signal)."""
+        if seconds <= 0 or nbytes < MIN_WIRE_SAMPLE_BYTES:
+            return
+        bw = nbytes / seconds
+        obs = getattr(self, "_wire_obs", None)
+        if obs is None:
+            obs = {}
+            self._wire_obs = obs  # plain attr: stays out of asdict()/cache
+        st = obs.get(kind)
+        if st is None:
+            st = obs[kind] = {"bw": bw, "samples": 0, "bytes": 0,
+                              "seconds": 0.0}
+        else:
+            st["bw"] = (1 - WIRE_EWMA_ALPHA) * st["bw"] + WIRE_EWMA_ALPHA * bw
+        st["samples"] += 1
+        st["bytes"] += nbytes
+        st["seconds"] += seconds
+        if kind == "peer":
+            self.peer_bw = st["bw"]
+        elif kind == "cloud":
+            self.cloud_bw = st["bw"]
+
+    def wire_calibration(self) -> dict:
+        """Measured-link state per kind: ``{kind: {bw, samples, bytes,
+        seconds}}`` (empty until :meth:`observe_wire` has seen a
+        transfer)."""
+        return {k: dict(v)
+                for k, v in getattr(self, "_wire_obs", {}).items()}
 
     def h2d_time(self, nbytes: int) -> float:
         return nbytes / self.h2d_bw

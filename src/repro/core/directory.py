@@ -537,6 +537,82 @@ class ShardedClusterDirectory:
                 if not table:
                     del v.shards[key]
 
+    # -- wire-serializable anti-entropy (DESIGN.md §11) ---------------------
+    def export_snapshot(self,
+                        shard_ids: Optional[Iterable[int]] = None) -> dict:
+        """Msgpack-safe snapshot of membership plus the selected shards'
+        records (all shards when None) — the transport-carried half of
+        :meth:`sync_with`, so two directory replicas in *separate
+        processes* can reconcile by exchanging snapshots over RPC. Keys
+        become 3-lists, tiers their enum values; node refs are replaced
+        by the member's advertised transport address (None for purely
+        in-process members)."""
+        members = {}
+        with self._member_lock:
+            for name, m in self._members.items():
+                members[name] = [m.inc, m.alive,
+                                 getattr(m.node, "address", None)]
+        views = {}
+        sids = range(self.n_shards) if shard_ids is None else shard_ids
+        for sid in sids:
+            where, shards, gen, ver = self._export_shard(sid)
+            views[sid] = {
+                "gen": gen, "ver": ver,
+                "where": [[list(key), n, sorted(t.value for t in rec[0]),
+                           rec[1], rec[2]]
+                          for key, holders in where.items()
+                          for n, rec in holders.items()],
+                "shards": [[list(key), idx, n,
+                            sorted(t.value for t in rec[0]), rec[1], rec[2]]
+                           for key, table in shards.items()
+                           for idx, holders in table.items()
+                           for n, rec in holders.items()],
+            }
+        with self._member_lock:
+            epoch = self._membership_epoch
+        return {"n_shards": self.n_shards, "epoch": epoch,
+                "members": members, "views": views}
+
+    def merge_snapshot(self, snap: dict, resolver=None) -> int:
+        """Merge a peer replica's :meth:`export_snapshot` (the receive
+        half of transport-carried anti-entropy). ``resolver(name,
+        address)`` supplies a node-like object (a ``PeerStub``) for
+        members learned with a transport address; without one, remotely
+        learned members resolve to None until they register locally.
+        Same conflict rules as :meth:`sync_with`. Returns the number of
+        records merged or purged."""
+        if snap.get("n_shards") != self.n_shards:
+            raise ValueError("peer views must agree on n_shards")
+        before = (self._sync_stats["records_merged"]
+                  + self._sync_stats["records_purged"])
+        member_snap = {}
+        for name, (inc, alive, address) in snap["members"].items():
+            node = None
+            if alive and address and resolver is not None:
+                node = resolver(name, address)
+            member_snap[name] = (node, inc, alive)
+        for node in self._import_members(member_snap):
+            node.detach()
+        with self._member_lock:
+            self._membership_epoch = max(self._membership_epoch,
+                                         snap.get("epoch", 0))
+        for sid_raw, view in snap["views"].items():
+            sid = int(sid_raw)  # JSON-ish carriers stringify int keys
+            where: Dict[ModelKey, Dict[str, tuple]] = {}
+            for key3, name, tiers, ver, inc in view["where"]:
+                where.setdefault(ModelKey(*key3), {})[name] = \
+                    ({Tier(t) for t in tiers}, ver, inc)
+            shards: Dict[ModelKey, Dict[int, Dict[str, tuple]]] = {}
+            for key3, idx, name, tiers, ver, inc in view["shards"]:
+                shards.setdefault(ModelKey(*key3), {}) \
+                    .setdefault(idx, {})[name] = \
+                    ({Tier(t) for t in tiers}, ver, inc)
+            self._import_shard(sid, where, shards, view["gen"], view["ver"])
+        self._sync_stats["sync_rounds"] += 1
+        after = (self._sync_stats["records_merged"]
+                 + self._sync_stats["records_purged"])
+        return after - before
+
     def sync_with(self, other: "ShardedClusterDirectory",
                   shard_ids: Optional[Iterable[int]] = None) -> int:
         """One anti-entropy round against a peer view: merge membership

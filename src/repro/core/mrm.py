@@ -78,6 +78,12 @@ class OpenTimings:
     demote_s: float = 0.0         # modeled D2H cost of demotions this open caused
     staging_serial_modeled_s: float = 0.0
     staging_pipelined_modeled_s: float = 0.0
+    # measured wire accounting (DESIGN.md §11): real seconds/bytes on a
+    # socket transport (sum of per-transfer times — parallel gather links
+    # overlap, so this is link-busy time, not wall time). Zero for
+    # in-process (loopback) transfers, whose link times stay modeled.
+    wire_s: float = 0.0
+    wire_bytes: int = 0
 
     def modeled_total(self) -> float:
         return (self.cloud_s + self.peer_s + self.gather_s

@@ -21,7 +21,6 @@ from __future__ import annotations
 
 import os
 import socket
-import struct
 import threading
 import time
 import uuid
@@ -29,11 +28,12 @@ from dataclasses import dataclass
 from multiprocessing import shared_memory
 from typing import Dict, List, Optional
 
-import msgpack
 import numpy as np
 
 from repro.core.mrm import MRM, ModelKey
 from repro.core.store import _np_dtype
+from repro.core.transport import (TransportError, recv_frame, recvn,
+                                  send_frame)
 
 
 class ShmSegment:
@@ -87,33 +87,14 @@ class ShmSegment:
 
 
 # ---------------------------------------------------------------------------
-# framing
+# framing — the robust primitives live in core.transport (partial-write and
+# EINTR handling, mid-frame-EOF detection); these aliases keep the module's
+# historical private names for callers and tests
 # ---------------------------------------------------------------------------
 
-def _send(sock: socket.socket, obj: dict):
-    data = msgpack.packb(obj, use_bin_type=True)
-    sock.sendall(struct.pack("<I", len(data)) + data)
-
-
-def _recv(sock: socket.socket) -> Optional[dict]:
-    hdr = _recvn(sock, 4)
-    if hdr is None:
-        return None
-    (n,) = struct.unpack("<I", hdr)
-    data = _recvn(sock, n)
-    if data is None:
-        return None
-    return msgpack.unpackb(data, raw=False)
-
-
-def _recvn(sock: socket.socket, n: int) -> Optional[bytes]:
-    buf = b""
-    while len(buf) < n:
-        chunk = sock.recv(n - len(buf))
-        if not chunk:
-            return None
-        buf += chunk
-    return buf
+_send = send_frame
+_recv = recv_frame
+_recvn = recvn
 
 
 # ---------------------------------------------------------------------------
@@ -121,12 +102,19 @@ def _recvn(sock: socket.socket, n: int) -> Optional[bytes]:
 # ---------------------------------------------------------------------------
 
 class MRMServer:
-    """Threaded daemon exposing an MRM over a unix socket."""
+    """Threaded daemon exposing an MRM over a unix socket.
 
-    def __init__(self, mrm: MRM, sock_path: str):
+    ``idle_timeout_s`` (None = wait forever, the historical behavior)
+    bounds how long a connection may sit silent between requests; a hung
+    or vanished client then releases its handles and server thread
+    instead of pinning them until process exit."""
+
+    def __init__(self, mrm: MRM, sock_path: str,
+                 idle_timeout_s: Optional[float] = None):
         assert mrm.use_shm, "MRMServer requires MRM(use_shm=True)"
         self.mrm = mrm
         self.sock_path = sock_path
+        self.idle_timeout_s = idle_timeout_s
         if os.path.exists(sock_path):
             os.unlink(sock_path)
         self.sock = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
@@ -151,15 +139,22 @@ class MRMServer:
     def _serve_conn(self, conn: socket.socket):
         conn_handles: List[int] = []
         try:
+            conn.settimeout(self.idle_timeout_s)
             while True:
-                req = _recv(conn)
+                try:
+                    req = _recv(conn)
+                except TransportError:
+                    break  # idle timeout or truncated frame: drop the conn
                 if req is None:
                     break
                 try:
                     resp = self._dispatch(req, conn_handles)
                 except Exception as e:  # noqa: BLE001 — wire errors back
                     resp = {"ok": False, "error": f"{type(e).__name__}: {e}"}
-                _send(conn, resp)
+                try:
+                    _send(conn, resp)
+                except TransportError:
+                    break  # client went away mid-response
         finally:
             # connection death releases its handles (paper: "user process exits")
             for hid in conn_handles:
@@ -234,16 +229,26 @@ class RemoteHandle:
 
 
 class RemoteTrimsClient:
-    """Client-process stub: attaches shm segments published by MRMServer."""
+    """Client-process stub: attaches shm segments published by MRMServer.
+
+    Thread-safe: one shared socket carries every request, so a
+    per-request lock serializes whole ``send``/``recv`` exchanges — two
+    threads interleaving frames would pair one thread's request with the
+    other's response."""
 
     def __init__(self, sock_path: str):
         self.sock = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
         self.sock.connect(sock_path)
+        self._lock = threading.Lock()
+
+    def _call(self, req: dict) -> Optional[dict]:
+        with self._lock:
+            _send(self.sock, req)
+            return _recv(self.sock)
 
     def open(self, framework: str, name: str, version: str = "1") -> RemoteHandle:
-        _send(self.sock, {"op": "open", "framework": framework,
-                          "name": name, "version": version})
-        resp = _recv(self.sock)
+        resp = self._call({"op": "open", "framework": framework,
+                           "name": name, "version": version})
         if resp is None or not resp.get("ok"):
             raise RuntimeError(f"open failed: {resp}")
         t0 = time.perf_counter()
@@ -267,20 +272,17 @@ class RemoteTrimsClient:
                 seg.shm.close()
             except Exception:
                 pass
-        _send(self.sock, {"op": "close", "handle_id": h.handle_id})
-        _recv(self.sock)
+        self._call({"op": "close", "handle_id": h.handle_id})
 
     def prefetch(self, framework: str, name: str, version: str = "1"):
         """Ask the daemon to warm the host tier; returns once acknowledged."""
-        _send(self.sock, {"op": "prefetch", "framework": framework,
-                          "name": name, "version": version})
-        resp = _recv(self.sock)
+        resp = self._call({"op": "prefetch", "framework": framework,
+                           "name": name, "version": version})
         if resp is None or not resp.get("ok"):
             raise RuntimeError(f"prefetch failed: {resp}")
 
     def stats(self) -> dict:
-        _send(self.sock, {"op": "stats"})
-        resp = _recv(self.sock)
+        resp = self._call({"op": "stats"})
         return resp["stats"]
 
     def disconnect(self):

@@ -454,10 +454,10 @@ class TestPeerWireCodec:
         obj.put(key, tensors)  # lzma entry in the manifest
         node0 = cluster.node("node0")
         node0.mrm.disk.put(key, tensors)
-        path = node0.mrm.disk.path_for(key)
         st = obj.stat(key)
         lzma_ratio = st["nbytes"] / st["stored_nbytes"]
-        got = cluster.node("node1")._wire_ratio(key, path)
+        # the holder peer exposes its local file for ratio sampling
+        got = cluster.node("node1")._wire_ratio(key, node0)
         assert got != pytest.approx(lzma_ratio)  # sampled, not borrowed
         assert key in cluster.node("node1")._ratio_cache  # memoized
 

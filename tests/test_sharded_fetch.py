@@ -592,14 +592,15 @@ class TestDropNodeMidFetchRegression:
         n0, n1 = cluster.node("node0"), cluster.node("node1")
         n1.mrm.close(n1.mrm.open(key))
         import repro.core.cluster as cluster_mod
-        real_copy = cluster_mod.shutil.copyfile
+        real_read = cluster_mod.ClusterNode.read_model
 
-        def drop_mid_copy(src, dst):
-            out = real_copy(src, dst)
+        def drop_mid_copy(self, key, write, **kw):
+            out = real_read(self, key, write, **kw)
             cluster.directory.drop_node("node1")
             return out
 
-        monkeypatch.setattr(cluster_mod.shutil, "copyfile", drop_mid_copy)
+        monkeypatch.setattr(cluster_mod.ClusterNode, "read_model",
+                            drop_mid_copy)
         h = n0.mrm.open(key)
         assert h.timings.tier_hit == "cloud"
         assert h.timings.peer_s == 0.0          # dead link never charged
@@ -619,16 +620,15 @@ class TestDropNodeMidFetchRegression:
         n0, n1 = cluster.node("node0"), cluster.node("node1")
         n1.mrm.close(n1.mrm.open(key))
         import repro.core.cluster as cluster_mod
-        real_copy = cluster_mod.shutil.copyfile
         peer_path = n1.mrm.disk.path_for(key)
 
-        def vanish(src, dst):
-            if src != peer_path:  # shutil is shared — only fault the peer leg
-                return real_copy(src, dst)
-            os.unlink(src)
-            raise FileNotFoundError(src)
+        # only the peer data plane is faulted (the CLOUD leg never calls
+        # the peer surface), mirroring a copy deleted under the serve
+        def vanish(self, key, write, **kw):
+            os.unlink(peer_path)
+            raise FileNotFoundError(peer_path)
 
-        monkeypatch.setattr(cluster_mod.shutil, "copyfile", vanish)
+        monkeypatch.setattr(cluster_mod.ClusterNode, "read_model", vanish)
         h = n0.mrm.open(key)
         assert h.timings.tier_hit == "cloud"
         assert n0.stats()["peer_fetches"] == 0

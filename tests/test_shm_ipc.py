@@ -107,3 +107,36 @@ def test_connection_death_releases_handles(server):
             break
         time.sleep(0.05)
     assert server.mrm.host.peek(key).refcount == 0
+
+
+def test_client_is_thread_safe(server):
+    """Regression: RemoteTrimsClient shares ONE socket; unsynchronized
+    threads used to interleave request/response frames and read each
+    other's replies. The per-request lock must keep every thread's
+    open/stats/close pairing intact under contention."""
+    import threading
+
+    client = RemoteTrimsClient(server.sock_path)
+    expect = _tensors(seed=7)
+    errs = []
+
+    def worker(i):
+        try:
+            for _ in range(15):
+                h = client.open("jax", "shared")
+                assert h.timings["tier_hit"] in ("disk", "host")
+                np.testing.assert_array_equal(h.arrays["w0"], expect["w0"])
+                assert isinstance(client.stats()["opens"], int)
+                client.close(h)
+        except Exception as e:  # noqa: BLE001 — collected for the assert
+            errs.append((i, e))
+
+    threads = [threading.Thread(target=worker, args=(i,)) for i in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errs, errs[:3]
+    # every handle closed: the shared entry's refcount drained to zero
+    assert server.mrm.host.peek(ModelKey("jax", "shared")).refcount == 0
+    client.disconnect()

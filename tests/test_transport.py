@@ -1,0 +1,317 @@
+"""Transport layer: framing, partial I/O robustness, socket RPC,
+loopback parity (DESIGN.md §11)."""
+from __future__ import annotations
+
+import os
+import socket
+import tempfile
+import threading
+import time
+
+import pytest
+
+from repro.core.transport import (LoopbackTransport, RemoteError,
+                                  SocketServer, SocketTransport,
+                                  TransportError, parse_address, recv_chunk,
+                                  recv_frame, recvn, send_chunk, send_frame,
+                                  sendall)
+
+
+def sockpair():
+    a, b = socket.socketpair()
+    return a, b
+
+
+# ---------------------------------------------------------------------------
+# framing primitives
+# ---------------------------------------------------------------------------
+
+class TestFraming:
+    def test_frame_roundtrip(self):
+        a, b = sockpair()
+        try:
+            send_frame(a, {"op": "x", "n": 3, "blob": b"\x00\xff",
+                           "nested": {"k": [1, 2]}})
+            got = recv_frame(b)
+            assert got == {"op": "x", "n": 3, "blob": b"\x00\xff",
+                           "nested": {"k": [1, 2]}}
+        finally:
+            a.close(); b.close()
+
+    def test_int_map_keys_survive(self):
+        # directory snapshots key views by int shard id
+        a, b = sockpair()
+        try:
+            send_frame(a, {"views": {0: "a", 7: "b"}})
+            assert recv_frame(b)["views"] == {0: "a", 7: "b"}
+        finally:
+            a.close(); b.close()
+
+    def test_clean_eof_returns_none(self):
+        a, b = sockpair()
+        a.close()
+        try:
+            assert recv_frame(b) is None
+        finally:
+            b.close()
+
+    def test_mid_frame_eof_raises(self):
+        a, b = sockpair()
+        try:
+            send_frame(a, {"op": "x", "pad": b"\x00" * 1024})
+            # peek the total frame size, then deliver only part of it
+            data = b.recv(4, socket.MSG_PEEK)
+            assert len(data) == 4
+        finally:
+            a.close()
+        # drain a prefix, then EOF mid-frame
+        b.recv(10)
+        with pytest.raises(TransportError):
+            while True:
+                if recv_frame(b) is None:
+                    raise AssertionError("expected TransportError, got EOF")
+        b.close()
+
+    def test_oversized_frame_rejected(self):
+        a, b = sockpair()
+        try:
+            import struct
+            a.sendall(struct.pack("<I", (1 << 30)))
+            with pytest.raises(TransportError, match="exceeds cap"):
+                recv_frame(b)
+        finally:
+            a.close(); b.close()
+
+    def test_chunk_stream_roundtrip(self):
+        a, b = sockpair()
+        try:
+            chunks = [b"abc", b"d" * 70000, b"e"]
+            for c in chunks:
+                send_chunk(a, c)
+            send_chunk(a, b"")  # end of stream
+            got = []
+            while True:
+                c = recv_chunk(b)
+                if c is None:
+                    break
+                got.append(c)
+            assert b"".join(got) == b"".join(chunks)
+        finally:
+            a.close(); b.close()
+
+    def test_parse_address(self):
+        kind, where = parse_address("unix:/tmp/x.sock")
+        assert kind == "unix" and where == "/tmp/x.sock"
+        kind, where = parse_address("tcp:127.0.0.1:8080")
+        assert kind == "tcp" and where == ("127.0.0.1", 8080)
+        with pytest.raises(ValueError):
+            parse_address("http://nope")
+
+
+# ---------------------------------------------------------------------------
+# partial-write / EINTR robustness (the satellite around _send/_recvn)
+# ---------------------------------------------------------------------------
+
+class _DribbleSock:
+    """Fake socket: sends one byte at a time, injects EINTR, records all
+    bytes; recv side serves from a buffer one byte at a time."""
+
+    def __init__(self, rx: bytes = b""):
+        self.sent = bytearray()
+        self.rx = rx
+        self.pos = 0
+        self.calls = 0
+
+    def send(self, data) -> int:
+        self.calls += 1
+        if self.calls % 3 == 0:
+            raise InterruptedError  # EINTR: must be retried, not fatal
+        self.sent += bytes(data[:1])
+        return 1
+
+    def recv(self, n: int) -> bytes:
+        self.calls += 1
+        if self.calls % 3 == 0:
+            raise InterruptedError
+        if self.pos >= len(self.rx):
+            return b""
+        b = self.rx[self.pos:self.pos + 1]
+        self.pos += 1
+        return b
+
+
+class TestPartialIO:
+    def test_sendall_survives_short_writes_and_eintr(self):
+        s = _DribbleSock()
+        payload = os.urandom(257)
+        sendall(s, payload)
+        assert bytes(s.sent) == payload
+
+    def test_recvn_reassembles_one_byte_reads(self):
+        payload = os.urandom(129)
+        s = _DribbleSock(rx=payload)
+        assert recvn(s, len(payload)) == payload
+
+    def test_recvn_clean_eof_none_mid_eof_raises(self):
+        assert recvn(_DribbleSock(rx=b""), 8) is None
+        with pytest.raises(TransportError, match="mid-frame"):
+            recvn(_DribbleSock(rx=b"abc"), 8)
+
+    def test_send_timeout_is_transport_error(self):
+        class _T:
+            def send(self, data):
+                raise socket.timeout("timed out")
+        with pytest.raises(TransportError):
+            sendall(_T(), b"x" * 10)
+
+
+# ---------------------------------------------------------------------------
+# socket server + client
+# ---------------------------------------------------------------------------
+
+def _echo_handler(req):
+    op = req["op"]
+    if op == "echo":
+        return {"ok": True, "back": req.get("x")}
+    if op == "boom":
+        raise ValueError("kaput")
+    if op == "stream":
+        def chunks():
+            for i in range(req["n"]):
+                yield bytes([i]) * req["size"]
+        return {"ok": True, "stream": True}, chunks()
+    if op == "stream_dies":
+        def chunks():
+            yield b"first"
+            raise IOError("source vanished")
+        return {"ok": True, "stream": True}, chunks()
+    if op == "slow":
+        time.sleep(req["s"])
+        return {"ok": True}
+    raise ValueError(f"unknown {op}")
+
+
+@pytest.fixture
+def server():
+    tmp = tempfile.mkdtemp(prefix="transport-test-")
+    srv = SocketServer(_echo_handler, f"unix:{tmp}/rpc.sock")
+    yield srv
+    srv.stop()
+
+
+class TestSocketRPC:
+    def test_call_roundtrip(self, server):
+        t = SocketTransport(server.address)
+        assert t.call({"op": "echo", "x": [1, "two", b"3"]})["back"] == \
+            [1, "two", b"3"]
+        t.close()
+
+    def test_remote_exception_becomes_remote_error(self, server):
+        t = SocketTransport(server.address)
+        with pytest.raises(RemoteError, match="ValueError: kaput"):
+            t.call({"op": "boom"})
+        # the connection survives a remote error (no reconnect needed)
+        assert t.call({"op": "echo", "x": 1})["back"] == 1
+        t.close()
+
+    def test_streaming_body(self, server):
+        t = SocketTransport(server.address)
+        got = []
+        resp = t.call_stream({"op": "stream", "n": 5, "size": 70000},
+                             got.append)
+        assert resp["ok"]
+        assert b"".join(got) == b"".join(bytes([i]) * 70000
+                                         for i in range(5))
+        t.close()
+
+    def test_stream_source_death_fails_trailer(self, server):
+        t = SocketTransport(server.address)
+        got = []
+        with pytest.raises(RemoteError, match="source vanished"):
+            t.call_stream({"op": "stream_dies"}, got.append)
+        assert got == [b"first"]  # partial bytes delivered then aborted
+        t.close()
+
+    def test_concurrent_clients(self, server):
+        errs = []
+
+        def worker(i):
+            try:
+                t = SocketTransport(server.address)
+                for j in range(20):
+                    assert t.call({"op": "echo",
+                                   "x": i * 100 + j})["back"] == i * 100 + j
+                t.close()
+            except Exception as e:  # noqa: BLE001
+                errs.append(e)
+
+        ts = [threading.Thread(target=worker, args=(i,)) for i in range(8)]
+        for th in ts:
+            th.start()
+        for th in ts:
+            th.join()
+        assert not errs
+
+    def test_call_timeout_surfaces_as_transport_error(self, server):
+        t = SocketTransport(server.address, timeout_s=0.2)
+        with pytest.raises(TransportError):
+            t.call({"op": "slow", "s": 2.0})
+        t.close()
+
+    def test_reconnect_after_idle_close(self):
+        tmp = tempfile.mkdtemp(prefix="transport-idle-")
+        srv = SocketServer(_echo_handler, f"unix:{tmp}/rpc.sock",
+                           idle_timeout_s=0.2)
+        try:
+            t = SocketTransport(srv.address)
+            assert t.call({"op": "echo", "x": 1})["back"] == 1
+            time.sleep(0.6)  # server dropped the idle connection
+            # pooled-connection retry: the stale socket is replaced
+            assert t.call({"op": "echo", "x": 2})["back"] == 2
+            t.close()
+        finally:
+            srv.stop()
+
+    def test_tcp_ephemeral_port(self):
+        srv = SocketServer(_echo_handler, "tcp:127.0.0.1:0")
+        try:
+            assert srv.address.startswith("tcp:127.0.0.1:")
+            assert not srv.address.endswith(":0")
+            t = SocketTransport(srv.address)
+            assert t.call({"op": "echo", "x": "tcp"})["back"] == "tcp"
+            t.close()
+        finally:
+            srv.stop()
+
+    def test_connect_to_dead_server_is_oserror(self):
+        with pytest.raises(OSError):
+            SocketTransport("unix:/nonexistent/nope.sock").call({"op": "e"})
+
+
+# ---------------------------------------------------------------------------
+# loopback parity
+# ---------------------------------------------------------------------------
+
+class TestLoopback:
+    def test_same_surface_as_socket(self):
+        t = LoopbackTransport(_echo_handler)
+        assert t.remote is False
+        assert t.call({"op": "echo", "x": 5})["back"] == 5
+        with pytest.raises(RemoteError, match="ValueError: kaput"):
+            t.call({"op": "boom"})
+        got = []
+        resp = t.call_stream({"op": "stream", "n": 3, "size": 10},
+                             got.append)
+        assert resp["ok"] and len(b"".join(got)) == 30
+
+    def test_wire_type_normalization(self):
+        # requests round-trip through msgpack: tuples become lists, so
+        # in-process handlers see exactly what socket handlers see
+        seen = {}
+
+        def handler(req):
+            seen.update(req)
+            return {"ok": True}
+
+        LoopbackTransport(handler).call({"op": "x", "key": ("jax", "m", "1")})
+        assert seen["key"] == ["jax", "m", "1"]
