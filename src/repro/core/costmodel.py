@@ -13,6 +13,7 @@ import json
 import math
 import os
 import tempfile
+import threading
 import time
 from dataclasses import asdict, dataclass, field
 
@@ -105,6 +106,11 @@ class HardwareModel:
     dir_rtt: float = DIR_RTT              # client -> directory round trip
     dir_sync_entry_s: float = DIR_SYNC_ENTRY_S  # anti-entropy per-record cost
 
+    def __post_init__(self) -> None:
+        # plain (non-field) attrs: stay out of asdict() and the JSON cache
+        self._wire_lock = threading.Lock()
+        self._wire_obs: dict = {}
+
     # -- measured-wire calibration (DESIGN.md §11) --------------------------
     def observe_wire(self, kind: str, nbytes: int, seconds: float) -> None:
         """Fold one *measured* transfer into the link model: EWMA the
@@ -113,34 +119,34 @@ class HardwareModel:
         links at what the wire actually delivers instead of the datasheet
         constant. Only socket transports call this — in-process transfers
         keep the modeled constants. Tiny transfers are skipped (RTT
-        dominates; they carry no bandwidth signal)."""
+        dominates; they carry no bandwidth signal). Thread-safe: gather
+        threads report transfers concurrently, and an interleaved EWMA
+        read-modify-write would drop samples or tear the estimate."""
         if seconds <= 0 or nbytes < MIN_WIRE_SAMPLE_BYTES:
             return
         bw = nbytes / seconds
-        obs = getattr(self, "_wire_obs", None)
-        if obs is None:
-            obs = {}
-            self._wire_obs = obs  # plain attr: stays out of asdict()/cache
-        st = obs.get(kind)
-        if st is None:
-            st = obs[kind] = {"bw": bw, "samples": 0, "bytes": 0,
-                              "seconds": 0.0}
-        else:
-            st["bw"] = (1 - WIRE_EWMA_ALPHA) * st["bw"] + WIRE_EWMA_ALPHA * bw
-        st["samples"] += 1
-        st["bytes"] += nbytes
-        st["seconds"] += seconds
-        if kind == "peer":
-            self.peer_bw = st["bw"]
-        elif kind == "cloud":
-            self.cloud_bw = st["bw"]
+        with self._wire_lock:
+            st = self._wire_obs.get(kind)
+            if st is None:
+                st = self._wire_obs[kind] = {"bw": bw, "samples": 0,
+                                             "bytes": 0, "seconds": 0.0}
+            else:
+                st["bw"] = ((1 - WIRE_EWMA_ALPHA) * st["bw"]
+                            + WIRE_EWMA_ALPHA * bw)
+            st["samples"] += 1
+            st["bytes"] += nbytes
+            st["seconds"] += seconds
+            if kind == "peer":
+                self.peer_bw = st["bw"]
+            elif kind == "cloud":
+                self.cloud_bw = st["bw"]
 
     def wire_calibration(self) -> dict:
         """Measured-link state per kind: ``{kind: {bw, samples, bytes,
         seconds}}`` (empty until :meth:`observe_wire` has seen a
         transfer)."""
-        return {k: dict(v)
-                for k, v in getattr(self, "_wire_obs", {}).items()}
+        with self._wire_lock:
+            return {k: dict(v) for k, v in self._wire_obs.items()}
 
     def h2d_time(self, nbytes: int) -> float:
         return nbytes / self.h2d_bw

@@ -28,6 +28,7 @@ import argparse
 import hashlib
 import json
 import os
+import queue
 import signal
 import subprocess
 import sys
@@ -111,9 +112,24 @@ class PeerStub:
 
     # -- data plane (errors propagate: the caller re-plans) -----------------
     def read_model(self, key: ModelKey, write) -> int:
+        # count the bytes the sink actually received — never trust the
+        # server-reported nbytes for validation (a desynced/duplicated
+        # stream would pass it while the sink holds garbage), and the
+        # in-process surface returns bytes written too
+        got = 0
+
+        def counted(chunk: bytes) -> None:
+            nonlocal got
+            got += len(chunk)
+            write(chunk)
+
         resp = self.transport.call_stream(
-            {"op": "fetch_model", "key": _wire_key(key)}, write)
-        return resp["nbytes"]
+            {"op": "fetch_model", "key": _wire_key(key)}, counted)
+        nbytes = resp.get("nbytes")
+        if nbytes is not None and got != nbytes:
+            raise TransportError(f"{self.name}: fetch_model delivered "
+                                 f"{got} of {nbytes} bytes")
+        return got
 
     def read_model_ranges(self, key: ModelKey, ranges) -> bytes:
         return self.transport.call(
@@ -138,15 +154,33 @@ class PeerStub:
 # ---------------------------------------------------------------------------
 
 class _NodeRecord:
-    """Server-side stand-in for a remotely registered node: carries the
-    name and advertised address the directory hands back to planners;
-    ``detach`` is a no-op (the remote node's own lifecycle handles it)."""
+    """Stand-in for a registered member with no reachable data plane (it
+    advertised no address). It still carries the peer probe surface so
+    planners treat it exactly like a stale hint — every probe misses —
+    instead of crashing on a missing attribute; ``detach`` is a no-op
+    (the remote node's own lifecycle handles it)."""
 
     __slots__ = ("name", "address")
+
+    remote = True  # never actually read: probes always miss
 
     def __init__(self, name: str, address: Optional[str]):
         self.name = name
         self.address = address
+
+    # planner probes: an address-less member is unreachable, so it never
+    # verifies as a source (the CLOUD fall-through covers the fetch)
+    def has_model(self, key: ModelKey) -> bool:
+        return False
+
+    def model_nbytes(self, key: ModelKey) -> Optional[int]:
+        return None
+
+    def has_shard(self, key: ModelKey, index: int) -> bool:
+        return False
+
+    def local_model_path(self, key: ModelKey) -> Optional[str]:
+        return None
 
     def detach(self) -> None:
         pass
@@ -173,7 +207,13 @@ class DirectoryService:
         if op == "generation":
             return {"ok": True, "generation": d.generation}
         if op == "register":
-            rec = _NodeRecord(req["name"], req.get("address"))
+            # a registration that advertises an address resolves to a
+            # live PeerStub, so planners co-located with this directory
+            # replica probe (and fetch from) the remote member exactly
+            # like a DirectoryClient does; address-less members get the
+            # always-miss record
+            rec = (_stub_resolver(req["name"], req.get("address"))
+                   or _NodeRecord(req["name"], None))
             try:
                 d.register(rec)
             except KeyError:
@@ -620,7 +660,11 @@ def spawn_node(spec: dict, stderr=None, ready_timeout_s: float = 30.0
                ) -> Tuple[subprocess.Popen, dict]:
     """Launch ``python -m repro.core.noded`` with ``spec`` and block for
     its READY line. Returns ``(process, info)`` where ``info`` carries
-    the daemon's resolved ``name``/``address``/``client_sock``."""
+    the daemon's resolved ``name``/``address``/``client_sock``. Raises
+    :class:`TimeoutError` after ``ready_timeout_s`` even when the child
+    stays alive but silent (deadlocked before READY) — stdout is drained
+    by a reader thread, so the deadline is enforced while blocked, and
+    the pipe can never fill up and wedge the child afterwards."""
     env = dict(os.environ)
     src = os.path.dirname(os.path.dirname(os.path.dirname(
         os.path.abspath(__file__))))
@@ -630,10 +674,30 @@ def spawn_node(spec: dict, stderr=None, ready_timeout_s: float = 30.0
         [sys.executable, "-m", "repro.core.noded",
          "--spec", json.dumps(spec)],
         stdout=subprocess.PIPE, stderr=stderr, env=env, text=True)
+    lines: queue.Queue = queue.Queue()
+
+    def _pump(stream) -> None:
+        for out in stream:
+            lines.put(out)
+        lines.put(None)  # EOF sentinel: the child exited
+
+    threading.Thread(target=_pump, args=(proc.stdout,), daemon=True,
+                     name=f"noded-{spec.get('name')}-stdout").start()
     deadline = time.monotonic() + ready_timeout_s
+    last = ""
     while True:
-        line = proc.stdout.readline()
-        if not line:
+        remaining = deadline - time.monotonic()
+        if remaining <= 0:
+            proc.kill()
+            proc.wait(timeout=5)
+            raise TimeoutError(f"noded {spec.get('name')!r} never became "
+                               f"ready in {ready_timeout_s}s "
+                               f"(last line: {last!r})")
+        try:
+            line = lines.get(timeout=min(remaining, 0.2))
+        except queue.Empty:
+            continue
+        if line is None:
             proc.wait(timeout=5)
             raise RuntimeError(
                 f"noded {spec.get('name')!r} exited rc={proc.returncode} "
@@ -641,10 +705,7 @@ def spawn_node(spec: dict, stderr=None, ready_timeout_s: float = 30.0
         if line.startswith(READY_MARKER):
             info = json.loads(line[len(READY_MARKER):])
             return proc, info
-        if time.monotonic() > deadline:
-            proc.kill()
-            raise TimeoutError(f"noded {spec.get('name')!r} never became "
-                               f"ready (last line: {line!r})")
+        last = line
 
 
 def main(argv=None) -> int:

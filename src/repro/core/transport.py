@@ -128,8 +128,12 @@ def recv_frame(sock: socket.socket) -> Optional[dict]:
     if n > MAX_FRAME_BYTES:
         raise TransportError(f"frame length {n} exceeds cap "
                              f"{MAX_FRAME_BYTES} (desynced stream?)")
+    body = recvn(sock, n)
+    if body is None:  # EOF landed exactly between header and body
+        raise TransportError("connection closed between frame header "
+                             "and body")
     # strict_map_key off: directory snapshots key maps by int shard id
-    return msgpack.unpackb(recvn(sock, n), raw=False, strict_map_key=False)
+    return msgpack.unpackb(body, raw=False, strict_map_key=False)
 
 
 def send_chunk(sock: socket.socket, data: bytes) -> None:
@@ -149,7 +153,11 @@ def recv_chunk(sock: socket.socket) -> Optional[bytes]:
         return None
     if n > MAX_FRAME_BYTES:
         raise TransportError(f"chunk length {n} exceeds cap")
-    return recvn(sock, n)
+    data = recvn(sock, n)
+    if data is None:  # EOF between chunk header and body is truncation,
+        raise TransportError("connection closed between chunk header "
+                             "and body")  # never a clean end-of-stream
+    return data
 
 
 # ---------------------------------------------------------------------------
@@ -209,6 +217,7 @@ class SocketTransport:
         self._lock = threading.Lock()
         self._sock: Optional[socket.socket] = None
         self._fresh = False  # True until the first exchange completes
+        self._responded = False  # current request saw its response header
 
     def _ensure_sock(self) -> socket.socket:
         if self._sock is None:
@@ -231,6 +240,10 @@ class SocketTransport:
         if resp is None:
             raise TransportError(f"{self.address}: connection closed "
                                  f"awaiting response")
+        # this request's own response started arriving: a carrier failure
+        # from here on (mid-stream EOF/timeout) must never be retried —
+        # the sink may already hold a partial body
+        self._responded = True
         self._fresh = False
         if not resp.get("ok", False):
             raise RemoteError(resp.get("error", "remote handler failed"))
@@ -262,17 +275,22 @@ class SocketTransport:
         """One RPC whose response may stream byte chunks into ``sink``.
         Returns the header merged with the trailer."""
         with self._lock:
+            self._responded = False
             try:
                 return self._exchange(req, sink)
             except TransportError:
                 # a stale pooled connection dies on first reuse after a
                 # server restart/idle close; retry once on a fresh socket.
-                # Never retry a request that already saw response bytes —
-                # a desynced half-stream must not be resumed.
-                retry = not self._fresh
+                # Never retry a request that already saw any of its own
+                # response (``_responded``, not the per-connection
+                # ``_fresh`` — which this exchange may have just cleared):
+                # a desynced half-stream must not be resumed, and the sink
+                # may already hold partial chunks.
+                retry = not self._fresh and not self._responded
                 self._drop_sock()
                 if not retry:
                     raise
+                self._responded = False
                 try:
                     return self._exchange(req, sink)
                 except TransportError:

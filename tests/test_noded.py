@@ -104,6 +104,29 @@ class TestPeerStubParity:
         with pytest.raises(OSError):
             stub.read_model(key, lambda b: None)
 
+    def test_read_model_counts_sink_bytes_not_server_claim(self):
+        """read_model must validate against the bytes the sink actually
+        received — a server-reported nbytes would let a truncated or
+        duplicated stream pass the caller's size check."""
+        class _LyingTransport:
+            address = "fake:"
+
+            def __init__(self, payload, claim):
+                self.payload, self.claim = payload, claim
+
+            def call_stream(self, req, sink):
+                sink(self.payload)
+                return {"ok": True, "nbytes": self.claim}
+
+        key = ModelKey("jax", "m0", "1")
+        got = []
+        n = PeerStub(_LyingTransport(b"abcd", 4), "ok").read_model(
+            key, got.append)
+        assert n == 4 and got == [b"abcd"]
+        with pytest.raises(OSError, match="delivered 4 of 999"):
+            PeerStub(_LyingTransport(b"abcd", 999), "liar").read_model(
+                key, lambda b: None)
+
 
 class TestDirectoryOverRPC:
     def test_client_roundtrip(self, two_daemons):
@@ -182,6 +205,44 @@ class TestDirectoryOverRPC:
             c.shutdown()
             hung.close()
 
+    def test_addressless_member_has_probe_surface(self, tmp_path):
+        """A member registered without an advertised address must look
+        like a stale hint to planners (every probe misses), not crash
+        the open with an AttributeError."""
+        a = NodeDaemon({"name": "a", "disk_root": str(tmp_path / "a"),
+                        "listen": f"unix:{tmp_path}/a.sock",
+                        "directory": {"serve": True}})
+        try:
+            a.dir_service.handle({"op": "dir.register", "name": "ghost"})
+            client = DirectoryClient(LoopbackTransport(a.dir_service.handle))
+            key = ModelKey("jax", "m0", "1")
+            ghost = client.node("ghost")
+            assert ghost is not None and ghost.name == "ghost"
+            assert ghost.remote
+            assert ghost.has_model(key) is False
+            assert ghost.model_nbytes(key) is None
+            assert ghost.has_shard(key, 0) is False
+            assert ghost.local_model_path(key) is None
+            # the directory host's own planner sees the same surface
+            rec = a.dir_service.directory.node("ghost")
+            assert rec.has_model(key) is False
+        finally:
+            a.shutdown()
+
+    def test_remote_registration_resolves_to_stub_on_host(self, two_daemons):
+        """The directory-HOSTING process must plan against remote members
+        through a live PeerStub (b registered over RPC with an address),
+        so a reverse fetch a<-b probes real state instead of crashing."""
+        a, b, key, _ = two_daemons
+        rec = a.dir_service.directory.node("b")
+        assert isinstance(rec, PeerStub) and rec.address == b.address
+        assert rec.has_model(key) is False  # b is cold: real probe, miss
+        t = SocketTransport(b.address)
+        t.call({"op": "open", "key": list(key), "tier": "host",
+                "timeout": 60})
+        t.close()
+        assert rec.has_model(key) is True  # warm now: a can plan a<-b
+
     def test_anti_entropy_sync_converges(self, two_daemons):
         a, b, key, _ = two_daemons
         # a third replica, private, learns the fleet purely via dir.sync
@@ -200,6 +261,33 @@ class TestDirectoryOverRPC:
         d3.merge_snapshot(snap_stale)
         assert "b" not in {n.name for n in d3.nodes()}
         t.close()
+
+
+class TestWireCalibration:
+    def test_observe_wire_thread_safe(self):
+        """Concurrent gather threads feed the calibration; no sample may
+        be dropped to an interleaved EWMA read-modify-write."""
+        import threading
+        from repro.core.costmodel import (MIN_WIRE_SAMPLE_BYTES,
+                                          HardwareModel)
+        hw = HardwareModel()
+        n_threads, per = 8, 200
+        nb = MIN_WIRE_SAMPLE_BYTES
+
+        def worker():
+            for _ in range(per):
+                hw.observe_wire("peer", nb, 1e-3)
+
+        ts = [threading.Thread(target=worker) for _ in range(n_threads)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+        cal = hw.wire_calibration()["peer"]
+        assert cal["samples"] == n_threads * per
+        assert cal["bytes"] == n_threads * per * nb
+        # identical samples: the EWMA must land exactly on the one rate
+        assert hw.peer_bw == pytest.approx(nb / 1e-3)
 
 
 def wait_for(pred, timeout=10.0, interval=0.05):
@@ -259,6 +347,29 @@ class TestDaemonLifecycle:
         leaked = set(glob.glob("/dev/shm/trims_*")) - shm_before
         assert not leaked, f"daemons leaked shm: {leaked}"
         ta.close(); tb.close()
+
+    def test_spawn_ready_timeout_enforced_while_blocked(self, tmp_path):
+        """A child that stays alive but never prints READY (deadlocked
+        during init — here: its directory RPC hangs on a socket that
+        accepts and never answers) must fail at ``ready_timeout_s``, not
+        block forever inside readline."""
+        import socket as socketlib
+        hung_path = str(tmp_path / "hungdir.sock")
+        hung = socketlib.socket(socketlib.AF_UNIX)
+        hung.bind(hung_path)
+        hung.listen(4)
+        (tmp_path / "z").mkdir(exist_ok=True)
+        try:
+            t0 = time.monotonic()
+            with pytest.raises(TimeoutError, match="never became ready"):
+                spawn_node({"name": "z", "disk_root": str(tmp_path / "z"),
+                            "listen": f"unix:{tmp_path}/z-dp.sock",
+                            "call_timeout_s": 120,
+                            "directory": {"connect": f"unix:{hung_path}"}},
+                           ready_timeout_s=2.0)
+            assert time.monotonic() - t0 < 30
+        finally:
+            hung.close()
 
     def test_restart_gets_new_incarnation(self, tmp_path, register_daemon):
         key = ModelKey("jax", "m0", "1")

@@ -72,6 +72,29 @@ class TestFraming:
                     raise AssertionError("expected TransportError, got EOF")
         b.close()
 
+    def test_eof_between_frame_header_and_body_raises(self):
+        # kill -9 can land the EOF exactly between the 4-byte length
+        # prefix and the msgpack body: that must be a TransportError in
+        # the OSError taxonomy, never a TypeError from unpackb(None)
+        import struct
+        a, b = sockpair()
+        a.sendall(struct.pack("<I", 10))
+        a.close()
+        with pytest.raises(TransportError, match="between frame header"):
+            recv_frame(b)
+        b.close()
+
+    def test_eof_between_chunk_header_and_body_raises(self):
+        # same boundary inside a byte stream: truncation, not a clean
+        # end-of-stream marker
+        import struct
+        a, b = sockpair()
+        a.sendall(struct.pack("<I", 10))
+        a.close()
+        with pytest.raises(TransportError, match="between chunk header"):
+            recv_chunk(b)
+        b.close()
+
     def test_oversized_frame_rejected(self):
         a, b = sockpair()
         try:
@@ -286,6 +309,78 @@ class TestSocketRPC:
     def test_connect_to_dead_server_is_oserror(self):
         with pytest.raises(OSError):
             SocketTransport("unix:/nonexistent/nope.sock").call({"op": "e"})
+
+    def test_mid_stream_failure_is_never_retried(self, tmp_path):
+        """A TransportError AFTER this request's response started (server
+        dies mid-stream) must not trigger the stale-connection retry: a
+        resent stream would duplicate into a sink that already consumed
+        partial chunks. The request must reach the server exactly once."""
+        path = str(tmp_path / "half.sock")
+        srv = socket.socket(socket.AF_UNIX)
+        srv.bind(path)
+        srv.listen(4)
+        requests = []
+
+        def serve():
+            while True:
+                try:
+                    conn, _ = srv.accept()
+                except OSError:
+                    return
+                while True:
+                    req = recv_frame(conn)
+                    if req is None:
+                        conn.close()
+                        break
+                    requests.append(req["op"])
+                    if req["op"] == "echo":
+                        send_frame(conn, {"ok": True})
+                        continue
+                    # streaming header + one chunk, then an abrupt close
+                    send_frame(conn, {"ok": True, "stream": True,
+                                      "nbytes": 12})
+                    send_chunk(conn, b"part")
+                    conn.close()
+                    break
+
+        threading.Thread(target=serve, daemon=True).start()
+        try:
+            t = SocketTransport(f"unix:{path}", timeout_s=5)
+            # a completed exchange first: the connection is reused (not
+            # fresh) when the stream fails, which is exactly the state
+            # the broken guard used to retry from
+            assert t.call({"op": "echo"})["ok"]
+            got = []
+            with pytest.raises(TransportError):
+                t.call_stream({"op": "stream"}, got.append)
+            assert got == [b"part"], "sink must hold only the half-stream"
+            assert requests == ["echo", "stream"], \
+                f"half-stream request was resent: {requests}"
+            # the transport recovers on the next request (new connection)
+            assert t.call({"op": "echo"})["ok"]
+            t.close()
+        finally:
+            srv.close()
+
+    def test_failure_before_response_on_reused_conn_still_retries(self):
+        """The legitimate retry — a pooled connection the server closed
+        idle — must keep working after the mid-stream guard tightened."""
+        tmp = tempfile.mkdtemp(prefix="transport-retry-")
+        srv = SocketServer(_echo_handler, f"unix:{tmp}/rpc.sock",
+                           idle_timeout_s=0.2)
+        try:
+            t = SocketTransport(srv.address)
+            got = []
+            t.call_stream({"op": "stream", "n": 2, "size": 10}, got.append)
+            assert len(b"".join(got)) == 20
+            time.sleep(0.6)  # server drops the idle connection
+            got2 = []
+            resp = t.call_stream({"op": "stream", "n": 2, "size": 10},
+                                 got2.append)
+            assert resp["ok"] and len(b"".join(got2)) == 20
+            t.close()
+        finally:
+            srv.stop()
 
 
 # ---------------------------------------------------------------------------
