@@ -148,23 +148,40 @@ def run(smoke: bool = False, verbose: bool = False) -> list:
 
         # -- phase 2: multi-source gather over sockets -----------------------
         n_shards = _scatter(store, k_gather, [ta, tb])
+        # inject a per-shard serve delay on BOTH sources: summed link-busy
+        # wire seconds can then only beat the gather's wall clock if the
+        # two daemons' shard streams genuinely overlapped — one socket per
+        # concurrent source (dedicated data-plane connections), not turns
+        # on a shared per-stub connection
+        for t in (ta, tb):
+            t.call({"op": "set_serve_delay", "seconds": serve_delay})
+        t_open = time.perf_counter()
         r = tc.call({"op": "open", "key": list(k_gather), "tier": "host",
                      "timeout": 120})
+        gather_wall_s = time.perf_counter() - t_open
+        for t in (ta, tb):
+            t.call({"op": "set_serve_delay", "seconds": 0.0})
         t2 = r["timings"]
         assert t2["tier_hit"] == "gather", t2
         assert r["disk_digest"] == digests[k_gather], "gathered bytes corrupt"
         assert t2["wire_s"] > 0
+        assert t2["wire_s"] > gather_wall_s, (
+            f"no wire overlap: {t2['wire_s']:.3f}s summed link-busy vs "
+            f"{gather_wall_s:.3f}s wall — peer streams serialized")
         stats = tc.call({"op": "node_stats"})["node"]
         assert stats["shards_from_peers"] > 0, stats
         rows.append({"phase": "gather", "tier_hit": t2["tier_hit"],
                      "nbytes": r["nbytes"], "n_shards": n_shards,
-                     "wire_s": t2["wire_s"],
+                     "wire_s": t2["wire_s"], "wall_s": gather_wall_s,
+                     "overlap_x": t2["wire_s"] / gather_wall_s,
                      "shards_from_peers": stats["shards_from_peers"],
                      "total_s": t2["total_s"], "ok": True})
         if verbose:
             print(f"  gather: {n_shards} shards from 2 daemons, "
                   f"{stats['shards_from_peers']} over the wire, "
-                  f"link-busy {t2['wire_s'] * 1e3:.1f} ms")
+                  f"link-busy {t2['wire_s'] * 1e3:.1f} ms over "
+                  f"{gather_wall_s * 1e3:.1f} ms wall "
+                  f"({rows[-1]['overlap_x']:.2f}x overlap)")
 
         # -- phase 3: kill -9 a source daemon mid-gather ---------------------
         for k in k_kill:

@@ -1,0 +1,340 @@
+"""Multi-tenant isolation under an adversarial mixed workload (DESIGN.md §12).
+
+One FaaS node shares its TrIMS store between two tenants with opposite
+profiles: ``svc`` runs a latency-critical Zipf stream over a hot set with
+a per-request deadline, while ``scan`` runs a batch registry sweep over
+the cold tail — the classic noisy neighbor whose one-shot flood evicts
+everyone else's working set. Each cell replays the same trace on a
+virtual clock (deterministic on any host) and is scored on the critical
+tenant's p99 and the aggregate completed-request throughput:
+
+  * ``isolated``   — the critical tenant alone: its best-case p99.
+  * ``mixed/none`` — both tenants, no :class:`TenantRegistry`: the sweep
+    churns the shared device tier and the critical tail absorbs reloads.
+  * ``mixed/iso``  — both tenants under a registry: the scanner's hard
+    device quota degrades its staging to host once exhausted, and
+    share-weighted CostAware eviction drains scanner bytes first.
+
+In-bench assertions (the PR's acceptance criteria):
+
+  1. critical p99 under isolation stays within 10% of the isolated run;
+  2. aggregate throughput under isolation stays within 5% of (in
+     practice, above) the no-isolation configuration;
+  3. a noisy-neighbor cell at the MRM level shows the scanning tenant
+     cannot displace more than its quota's share of the other tenant's
+     device-resident hot set;
+
+plus an admission cell driving both tiers past the pressure threshold:
+batch work is queued/shed while critical work still admits.
+
+  PYTHONPATH=src python -m benchmarks.bench_tenant [--smoke]
+"""
+from __future__ import annotations
+
+import os
+import random
+import shutil
+import tempfile
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from benchmarks.common import DISPATCH_FLOOR_S, write_csv
+from benchmarks.bench_slo import (HOT_MODELS, SWEEP_MODELS, ZIPF_S,
+                                  make_objectstore, modeled_request_s)
+from repro.core import (AdmissionError, DiskStore, FaaSPlatform,
+                        HardwareModel, MRM, ModelKey, ObjectStore,
+                        RequestContext, TenantQuota, TenantRegistry)
+
+TENANT_SVC = "svc"       # latency-critical interactive service
+TENANT_SCAN = "scan"     # batch registry scanner (the noisy neighbor)
+DEADLINE_S = 0.2         # svc per-request SLO (bench_slo's regime)
+SCAN_EVERY = 2           # one scan request per SCAN_EVERY svc requests
+DEVICE_HOT_HEADROOM = 1.30   # device tier = hot set x this (scan can't fit)
+HOST_FRAC = 1.25             # host holds everything: the mixed cells score
+                             # eviction fairness, not admission refusals
+SCAN_DEV_QUOTA_FRAC = 0.25   # scanner's hard device quota (its "share")
+
+
+def gen_mixed_trace(rng: random.Random, n: int, hot_keys, scan_keys,
+                    include_scan: bool = True) -> List[Tuple[str, ModelKey]]:
+    """(tenant, key) arrivals: Zipf svc stream with a scan request woven in
+    every SCAN_EVERY svc arrivals. ``include_scan=False`` yields the same
+    svc arrival sequence alone (the isolated baseline replays *identical*
+    svc work, so its p99 is comparable)."""
+    weights = [1.0 / (r + 1) ** ZIPF_S for r in range(len(hot_keys))]
+    svc = rng.choices(hot_keys, weights=weights, k=n)
+    out: List[Tuple[str, ModelKey]] = []
+    scan_i = 0
+    for i, key in enumerate(svc):
+        out.append((TENANT_SVC, key))
+        if include_scan and (i + 1) % SCAN_EVERY == 0:
+            out.append((TENANT_SCAN, scan_keys[scan_i % len(scan_keys)]))
+            scan_i += 1
+    return out
+
+
+def _predict(c, payload):
+    """Deployed function: the model open inherits the invoke's context via
+    ``container.current_ctx`` — the bench never re-plumbs the tenant."""
+    key, upscale = payload
+    m = c.load_model(key.framework, key.name, key.version)
+    lat = modeled_request_s(m.timings, upscale)
+    c.unload_model(m)
+    return lat
+
+
+def run_cell(name: str, root: str, obj: ObjectStore, keys, hot_bytes: int,
+             total_bytes: int, trace, warmup: int, scale: float,
+             isolate: bool, verbose: bool = True) -> Dict:
+    """Replay one trace on a fresh single-node platform; virtual clock."""
+    hw = HardwareModel()
+    upscale = 1.0 / scale
+    cdir = os.path.join(root, name)
+    dev_cap = max(1 << 20, int(hot_bytes * DEVICE_HOT_HEADROOM))
+    mrm = MRM(DiskStore(os.path.join(cdir, "disk")), objectstore=obj,
+              device_capacity=dev_cap,
+              host_capacity=max(1 << 21, int(total_bytes * HOST_FRAC)),
+              policy="slo", hw=hw)
+    vclock = [0.0]
+    mrm.slo.predictor.clock = lambda: vclock[0]
+    reg = None
+    if isolate:
+        reg = TenantRegistry()
+        reg.set_quota(TENANT_SVC, TenantQuota(share=3.0))
+        reg.set_quota(TENANT_SCAN, TenantQuota(
+            device_bytes=int(dev_cap * SCAN_DEV_QUOTA_FRAC), share=1.0))
+    platform = FaaSPlatform(mrm, name=name, tenants=reg)
+    platform.deploy("predict", _predict, prewarm=False)
+
+    ctxs = {
+        TENANT_SVC: RequestContext(tenant=TENANT_SVC, slo_class="critical",
+                                   deadline_s=DEADLINE_S),
+        TENANT_SCAN: RequestContext(tenant=TENANT_SCAN, slo_class="batch"),
+    }
+    svc_lats: List[float] = []
+    completed = refused = violations = 0
+    scored_t0: Optional[float] = None
+    for i, (tenant, key) in enumerate(trace):
+        if i == warmup:
+            scored_t0 = vclock[0]
+        try:
+            lat = platform.invoke("predict", (key, upscale),
+                                  ctx=ctxs[tenant])
+        except AdmissionError:
+            vclock[0] += DISPATCH_FLOOR_S  # a refusal costs one dispatch
+            if i >= warmup:
+                refused += 1
+            continue
+        vclock[0] += lat
+        if i >= warmup:
+            completed += 1
+            if tenant == TENANT_SVC:
+                svc_lats.append(lat)
+                violations += lat > DEADLINE_S
+    elapsed = vclock[0] - (scored_t0 if scored_t0 is not None else 0.0)
+    arr = np.asarray(svc_lats)
+    stats = mrm.stats()
+    row = {
+        "cell": name, "isolate": isolate, "requests": len(trace),
+        "svc_scored": len(svc_lats),
+        "svc_p50_s": float(np.percentile(arr, 50)),
+        "svc_p99_s": float(np.percentile(arr, 99)),
+        "svc_violation_rate": violations / max(1, len(svc_lats)),
+        "completed": completed, "refused": refused,
+        "throughput_rps": completed / max(elapsed, 1e-9),
+        "disk_loads": stats["disk_loads"],
+        "admission_degraded": stats["admission_degraded"],
+        "quota_degraded": stats["quota_degraded"],
+        "tenants": reg.stats() if reg is not None else None,
+        # the per-tenant SLO accounting must agree with the trace exactly:
+        # every admitted svc invoke carried a deadline, scan never did
+        "svc_slo_invocations":
+            (platform.tenant_acct[TENANT_SVC].slo_invocations
+             if TENANT_SVC in platform.tenant_acct else 0),
+    }
+    mrm.shutdown()
+    shutil.rmtree(cdir, ignore_errors=True)
+    if verbose:
+        print(f"  {name:<11} p99={row['svc_p99_s'] * 1e3:8.1f}ms "
+              f"viol={row['svc_violation_rate']:6.1%} "
+              f"thru={row['throughput_rps']:7.1f}req/s "
+              f"disk x{row['disk_loads']:<3d} "
+              f"degraded x{row['quota_degraded']}")
+    return row
+
+
+def run_noisy_neighbor(root: str, obj: ObjectStore, keys,
+                       hot_bytes: int, verbose: bool = True) -> Dict:
+    """MRM-level fairness: with the hot set device-resident under ``svc``,
+    a ``scan`` flood may displace at most its hard quota's share of it."""
+    hot = keys[:len(HOT_MODELS)]
+    scan_keys = keys[len(HOT_MODELS):]
+    dev_cap = max(1 << 20, int(hot_bytes * 1.05))  # barely fits the hot set
+    mrm = MRM(DiskStore(os.path.join(root, "noisy")), objectstore=obj,
+              device_capacity=dev_cap, host_capacity=dev_cap * 8,
+              policy="slo")
+    reg = TenantRegistry()
+    scan_quota = int(dev_cap * SCAN_DEV_QUOTA_FRAC)
+    reg.set_quota(TENANT_SCAN, TenantQuota(device_bytes=scan_quota))
+    reg.attach(mrm)
+    svc_ctx = RequestContext(tenant=TENANT_SVC)
+    scan_ctx = RequestContext(tenant=TENANT_SCAN, slo_class="batch")
+    for k in hot:  # resident hot set, attributed to svc
+        mrm.close(mrm.open(k, ctx=svc_ctx))
+    svc_before = reg.usage_bytes(TENANT_SVC, "device")
+    assert svc_before > 0, "hot set never landed on device"
+    for sweep in range(3):  # the flood: three full scans of the cold tail
+        for k in scan_keys:
+            mrm.close(mrm.open(k, ctx=scan_ctx))
+    svc_after = reg.usage_bytes(TENANT_SVC, "device")
+    scan_after = reg.usage_bytes(TENANT_SCAN, "device")
+    quota_degraded = mrm.stats()["quota_degraded"]
+    mrm.shutdown()
+    assert scan_after <= scan_quota, \
+        f"scanner holds {scan_after}B of device, over its {scan_quota}B quota"
+    # eviction is whole-model granular: fitting the scanner's last in-quota
+    # model may displace one victim larger than the bytes it lands
+    slack = max(obj.stat(k)["nbytes"] for k in hot)
+    assert svc_before - svc_after <= scan_quota + slack, \
+        (f"scanner displaced {svc_before - svc_after}B of the svc hot set — "
+         f"more than its {scan_quota}B quota share "
+         f"(+{slack}B eviction granularity)")
+    assert quota_degraded > 0, "flood never hit the quota degrade path"
+    row = {"cell": "noisy_neighbor", "device_capacity": dev_cap,
+           "scan_quota_bytes": scan_quota, "svc_bytes_before": svc_before,
+           "svc_bytes_after": svc_after, "scan_bytes_after": scan_after,
+           "svc_displaced_bytes": svc_before - svc_after,
+           "quota_degraded": quota_degraded, "ok": True}
+    if verbose:
+        print(f"  noisy_neighbor: scan displaced "
+              f"{row['svc_displaced_bytes'] / 2 ** 20:.2f} MiB "
+              f"<= quota {scan_quota / 2 ** 20:.2f} MiB "
+              f"(degraded x{quota_degraded})")
+    return row
+
+
+def run_admission(root: str, obj: ObjectStore, keys,
+                  verbose: bool = True) -> Dict:
+    """Pressure cell: with BOTH shared tiers above the pressure threshold,
+    batch work queues (in-share) or sheds (over-share) while critical work
+    still admits."""
+    hot = keys[:len(HOT_MODELS)]
+    nb = [obj.stat(k)["nbytes"] for k in hot]
+    # tiers sized so the first few opens saturate them past 95%
+    cap = int(sum(nb[:3]) * 1.01)
+    mrm = MRM(DiskStore(os.path.join(root, "pressure")), objectstore=obj,
+              device_capacity=cap, host_capacity=cap, policy="slo")
+    reg = TenantRegistry().attach(mrm)
+    platform = FaaSPlatform(mrm, name="pressure", tenants=reg)
+    platform.deploy("predict", _predict, prewarm=False)
+    crit = RequestContext(tenant=TENANT_SVC, slo_class="critical")
+    batch = RequestContext(tenant=TENANT_SCAN, slo_class="batch")
+    verdicts = {"admit": 0, "refused": 0}
+    for i in range(12):  # fill the tiers, alternating tenants
+        for ctx in (crit, batch):
+            try:
+                platform.invoke("predict", (hot[i % len(hot)], 1.0), ctx=ctx)
+                verdicts["admit"] += 1
+            except AdmissionError:
+                verdicts["refused"] += 1
+    st = reg.stats()
+    crit_refused = verdicts["refused"] - (st[TENANT_SCAN]["queued"]
+                                          + st[TENANT_SCAN]["shed"])
+    mrm.shutdown()
+    assert st[TENANT_SCAN]["queued"] + st[TENANT_SCAN]["shed"] > 0, \
+        f"batch work was never refused under pressure: {st}"
+    assert crit_refused == 0, \
+        f"critical work must always admit, got {crit_refused} refusals: {st}"
+    row = {"cell": "admission_pressure",
+           "batch_queued": st[TENANT_SCAN]["queued"],
+           "batch_shed": st[TENANT_SCAN]["shed"],
+           "critical_admitted": st[TENANT_SVC]["admitted"], "ok": True}
+    if verbose:
+        print(f"  admission: batch queued x{row['batch_queued']} "
+              f"shed x{row['batch_shed']}, critical admitted "
+              f"x{row['critical_admitted']} (never refused)")
+    return row
+
+
+def run(scale: Optional[float] = None, n_requests: Optional[int] = None,
+        smoke: bool = False, seed: int = 7, verbose: bool = True):
+    scale = scale if scale is not None else \
+        float(os.environ.get("TRIMS_BENCH_SCALE", "0.03"))
+    n_requests = n_requests or (300 if smoke else 900)
+    root = tempfile.mkdtemp(prefix="trims_tenant_")
+    rows: List[Dict] = []
+    try:
+        obj, keys, total_bytes = make_objectstore(root, scale)
+        hot = keys[:len(HOT_MODELS)]
+        scan_keys = keys[len(HOT_MODELS):]
+        hot_bytes = sum(obj.stat(k)["nbytes"] for k in hot)
+        if verbose:
+            print(f"-- tenant isolation: hot={hot_bytes / 2 ** 20:.1f}MB "
+                  f"(svc, deadline={DEADLINE_S * 1e3:.0f}ms) vs "
+                  f"{len(scan_keys)}-model batch sweep; {n_requests} svc "
+                  f"requests --")
+        rng = random.Random(seed)
+        mixed = gen_mixed_trace(rng, n_requests, hot, scan_keys)
+        solo = [r for r in mixed if r[0] == TENANT_SVC]
+        warm_solo = len(solo) // 4
+        # warmup must cover the same svc prefix in every cell: find the
+        # position of the warm_solo-th svc *arrival* (tuples repeat, so
+        # list.index would match an earlier equal-valued request)
+        svc_seen = 0
+        warm_mixed = len(mixed)
+        for pos, (tenant, _) in enumerate(mixed):
+            if tenant == TENANT_SVC:
+                if svc_seen == warm_solo:
+                    warm_mixed = pos
+                    break
+                svc_seen += 1
+        rows.append(run_cell("isolated", root, obj, keys, hot_bytes,
+                             total_bytes, solo, warm_solo, scale,
+                             isolate=False, verbose=verbose))
+        rows.append(run_cell("mixed_none", root, obj, keys, hot_bytes,
+                             total_bytes, mixed, warm_mixed, scale,
+                             isolate=False, verbose=verbose))
+        rows.append(run_cell("mixed_iso", root, obj, keys, hot_bytes,
+                             total_bytes, mixed, warm_mixed, scale,
+                             isolate=True, verbose=verbose))
+        base, noiso, iso = rows[0], rows[1], rows[2]
+        # acceptance 1: isolation holds the critical p99 near its
+        # isolated-run baseline despite the adversarial sweep
+        assert iso["svc_p99_s"] <= base["svc_p99_s"] * 1.10, \
+            (f"critical p99 {iso['svc_p99_s'] * 1e3:.1f}ms not within 10% "
+             f"of isolated baseline {base['svc_p99_s'] * 1e3:.1f}ms")
+        # acceptance 2: fairness is not bought with aggregate throughput
+        assert iso["throughput_rps"] >= noiso["throughput_rps"] * 0.95, \
+            (f"isolation throughput {iso['throughput_rps']:.1f} req/s fell "
+             f">5% below no-isolation {noiso['throughput_rps']:.1f} req/s")
+        # the per-tenant accounting saw exactly the admitted svc requests
+        assert iso["svc_slo_invocations"] == len(solo), \
+            (f"tenant accounting drifted: {iso['svc_slo_invocations']} "
+             f"svc SLO invocations vs {len(solo)} svc arrivals")
+        if verbose:
+            print(f"  => critical p99 {noiso['svc_p99_s'] * 1e3:.1f}ms -> "
+                  f"{iso['svc_p99_s'] * 1e3:.1f}ms under isolation "
+                  f"(baseline {base['svc_p99_s'] * 1e3:.1f}ms); throughput "
+                  f"{noiso['throughput_rps']:.1f} -> "
+                  f"{iso['throughput_rps']:.1f} req/s")
+        # acceptance 3 + admission behavior, as their own cells
+        rows.append(run_noisy_neighbor(root, obj, keys, hot_bytes, verbose))
+        rows.append(run_admission(root, obj, keys, verbose))
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+    write_csv("tenant_isolation", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=None)
+    ap.add_argument("--requests", type=int, default=None)
+    ap.add_argument("--smoke", action="store_true",
+                    help="short trace for the ci.sh --fast gate")
+    ap.add_argument("--seed", type=int, default=7)
+    args = ap.parse_args()
+    run(scale=args.scale, n_requests=args.requests, smoke=args.smoke,
+        seed=args.seed)

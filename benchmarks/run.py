@@ -137,6 +137,17 @@ def main() -> None:
                 f"kill9_recover_s={by_phase['kill9_midgather']['recover_s']:.2f};"
                 f"phases_ok={sum(1 for r in rows_r if r['ok'])}"))
 
+    print("== tenant: multi-tenant isolation & admission ==", flush=True)
+    from benchmarks import bench_tenant
+    rows_t = bench_tenant.run(smoke=not args.full, verbose=True)
+    by_cell = {r["cell"]: r for r in rows_t}
+    iso, noiso = by_cell["mixed_iso"], by_cell["mixed_none"]
+    out.append(("tenant_isolation", 1e6 * iso["svc_p99_s"],
+                f"p99_vs_none={noiso['svc_p99_s'] / max(iso['svc_p99_s'], 1e-12):.1f}x;"
+                f"thru_vs_none={iso['throughput_rps'] / max(noiso['throughput_rps'], 1e-12):.2f}x;"
+                f"displaced_mib={by_cell['noisy_neighbor']['svc_displaced_bytes'] / 2 ** 20:.1f};"
+                f"batch_refused={by_cell['admission_pressure']['batch_queued'] + by_cell['admission_pressure']['batch_shed']}"))
+
     print("== compression: codec x ratio x link bw ==", flush=True)
     from benchmarks import bench_compression
     rows_z = bench_compression.run(smoke=not args.full, verbose=True)

@@ -69,8 +69,20 @@ REQUIRED_CONTENT = [
     (os.path.join("docs", "API.md"), "ShardedClusterDirectory"),
     (os.path.join("docs", "API.md"), "FleetSim"),
     (os.path.join("docs", "API.md"), "directory_op_time"),
+    ("DESIGN.md", "Tenancy, admission & fair-share eviction"),
+    ("DESIGN.md", "RequestContext"),
+    ("DESIGN.md", "TenantRegistry"),
+    ("DESIGN.md", "fair shares"),
+    (os.path.join("docs", "API.md"), "RequestContext"),
+    (os.path.join("docs", "API.md"), "TenantRegistry"),
+    (os.path.join("docs", "API.md"), "TenantQuota"),
+    (os.path.join("docs", "API.md"), "AdmissionError"),
+    (os.path.join("docs", "API.md"), "tenant_acct"),
+    (os.path.join("docs", "API.md"), "current_ctx"),
     ("README.md", "bench_streaming"),
     ("README.md", "bench_fleet"),
+    ("README.md", "bench_tenant"),
+    ("README.md", "RequestContext"),
 ]
 
 LINK_RE = re.compile(r"(?<!\!)\[[^\]]+\]\(([^)\s]+)\)")

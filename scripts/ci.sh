@@ -47,6 +47,12 @@ if [[ "${1:-}" == "--fast" ]]; then
     # measured wire seconds, then kill -9 of a serving daemon mid-gather
     # with both opens still completing (asserted inside the benchmark)
     python -m benchmarks.bench_rpc --smoke
+    # multi-tenant isolation (DESIGN.md §12): the critical tenant's p99
+    # under an adversarial mixed workload must stay within 10% of its
+    # isolated baseline, aggregate throughput within 5% of no-isolation,
+    # and a noisy-neighbor flood must not displace more than its quota's
+    # share of another tenant's hot set (asserted inside the benchmark)
+    python -m benchmarks.bench_tenant --smoke
 else
     # coverage gate for the paper-core package (full mode only): enforced
     # whenever pytest-cov is importable; the floor tracks the suite, so
@@ -58,6 +64,7 @@ else
         ARGS+=(--cov=repro.core --cov=repro.core.layerplan
                --cov=repro.core.directory --cov=repro.core.fleetsim
                --cov=repro.core.transport --cov=repro.core.noded
+               --cov=repro.core.tenant
                --cov-fail-under=70)
     else
         echo "ci.sh: pytest-cov not installed - skipping the coverage gate"

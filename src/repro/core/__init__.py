@@ -40,6 +40,9 @@ from repro.core.slo import (  # noqa: F401
     NextUsePredictor, ReloadCostEstimator, SLOState,
 )
 from repro.core.store import CloudStore, DiskStore, ModelFile, write_model  # noqa: F401
+from repro.core.tenant import (  # noqa: F401
+    AdmissionError, RequestContext, TenantQuota, TenantRegistry,
+)
 from repro.core.transport import (  # noqa: F401
     LoopbackTransport, RemoteError, SocketServer, SocketTransport,
     TransportError,

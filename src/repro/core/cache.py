@@ -105,16 +105,25 @@ class CostAware(EvictionPolicy):
     ``horizon_fn() -> seconds`` supplies the live deadline horizon.
     ``cost_fn`` runs under the evicting cache's lock and must only take
     locks *below* it in the DEVICE -> HOST -> leaf order.
+
+    ``weight_fn(entry) -> float`` (optional) divides the score: a weight
+    above 1 makes the entry a *preferred* victim. The tenant registry
+    (DESIGN.md §12) wires this to each owner's fair-share overage so a
+    scanning tenant's flood drains its own bytes first. Same lock rule as
+    ``cost_fn``: it fires under the cache lock and may only take leaf
+    locks.
     """
     name = "slo"
 
-    def __init__(self, predictor=None, cost_fn=None, horizon_fn=None):
+    def __init__(self, predictor=None, cost_fn=None, horizon_fn=None,
+                 weight_fn=None):
         if predictor is None:
             from repro.core.slo import NextUsePredictor
             predictor = NextUsePredictor()
         self.predictor = predictor
         self.cost_fn = cost_fn
         self.horizon_fn = horizon_fn
+        self.weight_fn = weight_fn
 
     def _horizon_s(self) -> float:
         if self.horizon_fn is not None:
@@ -134,7 +143,10 @@ class CostAware(EvictionPolicy):
             gap = max(now - e.last_used, self.predictor.default_gap_s)
             p = 1.0 - math.exp(-horizon / gap)
         cost = self.cost_fn(e) if self.cost_fn is not None else float(e.nbytes)
-        return cost * p / max(1, e.nbytes)
+        s = cost * p / max(1, e.nbytes)
+        if self.weight_fn is not None:
+            s /= max(1e-9, self.weight_fn(e))
+        return s
 
     def order(self, entries):
         now = self.predictor.clock()

@@ -44,7 +44,10 @@ class TrimsClient:
         self.open_handles: Dict[int, ModelHandle] = {}
 
     def open(self, framework: str, name: str, version: str = "1",
-             activation_bytes: int = 0) -> ModelHandle:
+             activation_bytes: int = 0, ctx=None) -> ModelHandle:
+        """``ctx`` (optional :class:`~repro.core.tenant.RequestContext`)
+        rides down to the MRM so the open is tenant-attributed and
+        admission-checked; ``None`` is anonymous default-tenant traffic."""
         key = ModelKey(framework, name, version)
         gran = "model"
         if self.auto_granularity and self.mrm.disk.contains(key):
@@ -53,15 +56,17 @@ class TrimsClient:
             gran, _, r = plan_granularity(sizes)
             if r <= 0:
                 gran = "model"  # sharing still wins at coarse granularity
-        h = self.mrm.open(key, activation_bytes=activation_bytes, granularity=gran)
+        h = self.mrm.open(key, activation_bytes=activation_bytes,
+                          granularity=gran, ctx=ctx)
         self.open_handles[h.handle_id] = h
         return h
 
     def open_async(self, framework: str, name: str, version: str = "1",
-                   activation_bytes: int = 0):
+                   activation_bytes: int = 0, ctx=None):
         """Future-based open; ``result()`` yields the refcounted handle."""
         key = ModelKey(framework, name, version)
-        fut = self.mrm.open_async(key, activation_bytes=activation_bytes)
+        fut = self.mrm.open_async(key, activation_bytes=activation_bytes,
+                                  ctx=ctx)
         fut.add_done_callback(self._track_async)
         return fut
 
@@ -73,10 +78,11 @@ class TrimsClient:
             self.open_handles[h.handle_id] = h
 
     def prefetch(self, framework: str, name: str, version: str = "1",
-                 tier: str = "device"):
+                 tier: str = "device", ctx=None):
         """Warm-up hint: stage the model toward ``tier`` in the background
         without taking a reference (paper §4.1 'models can be preloaded')."""
-        return self.mrm.prefetch(ModelKey(framework, name, version), tier=tier)
+        return self.mrm.prefetch(ModelKey(framework, name, version),
+                                 tier=tier, ctx=ctx)
 
     def close(self, handle: ModelHandle):
         self.open_handles.pop(handle.handle_id, None)

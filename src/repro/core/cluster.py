@@ -31,7 +31,7 @@ from typing import Dict, List, Optional, Set, Tuple
 
 from repro.core.cache import Tier
 from repro.core.codec import get_codec, sample_ratio
-from repro.core.mrm import MRM, ModelKey
+from repro.core.mrm import MRM, ModelKey, _accepts_kwarg
 from repro.core.objectstore import shard_ranges
 from repro.core.pipeline import PipelineReport, run_pipeline
 from repro.core.store import atomic_dest_file
@@ -347,9 +347,13 @@ class ClusterNode:
         return path if os.path.exists(path) else None
 
     def read_model(self, key: ModelKey, write,
-                   chunk_bytes: int = 4 << 20) -> int:
+                   chunk_bytes: int = 4 << 20, ctx=None) -> int:
         """Serve the whole model file into ``write(bytes)`` chunk by
-        chunk; returns the byte count. One ``peer_serves``."""
+        chunk; returns the byte count. One ``peer_serves``. ``ctx`` is the
+        requesting side's RequestContext (DESIGN.md §12): the serving node
+        folds its deadline into its own eviction horizon, exactly as the
+        socket daemon does for remote peers."""
+        self._note_ctx(ctx)
         key = ModelKey(*key)
         total = 0
         with open(self.mrm.disk.path_for(key), "rb") as f:
@@ -362,9 +366,10 @@ class ClusterNode:
         self._note_serve("peer_serves")
         return total
 
-    def read_model_ranges(self, key: ModelKey, ranges) -> bytes:
+    def read_model_ranges(self, key: ModelKey, ranges, ctx=None) -> bytes:
         """Serve byte ranges sliced out of the whole-model file (a
         shard's ranges, or a layer window). One ``shard_serves``."""
+        self._note_ctx(ctx)
         key = ModelKey(*key)
         parts = []
         with open(self.mrm.disk.path_for(key), "rb") as f:
@@ -374,8 +379,9 @@ class ClusterNode:
         self._note_serve("shard_serves")
         return b"".join(parts)
 
-    def read_shard(self, key: ModelKey, index: int) -> bytes:
+    def read_shard(self, key: ModelKey, index: int, ctx=None) -> bytes:
         """Serve one shard-cache copy. One ``shard_serves``."""
+        self._note_ctx(ctx)
         key = ModelKey(*key)
         with open(self._shard_path(key, index), "rb") as f:
             data = f.read()
@@ -385,6 +391,13 @@ class ClusterNode:
     def _note_serve(self, counter: str) -> None:
         with self._metrics_lock:
             self.metrics[counter] += 1
+
+    def _note_ctx(self, ctx) -> None:
+        """A data-plane serve carrying a RequestContext shapes THIS node's
+        eviction horizon too — remote daemons see the same context local
+        calls do (the socket server parses it off the wire frame)."""
+        if ctx is not None and ctx.deadline_s is not None:
+            self.mrm.note_deadline(ctx.deadline_s)
 
     # -- local shard cache (§8) ----------------------------------------------
     def _shard_path(self, key: ModelKey, index: int) -> str:
@@ -581,7 +594,8 @@ class ClusterNode:
 
     def _pull_from_peer(self, key: ModelKey, peer: "ClusterNode",
                         peer_tier: Tier, peer_s: float, nbytes: int,
-                        ratio: float, timings, plan_gen: int) -> bool:
+                        ratio: float, timings, plan_gen: int,
+                        ctx=None) -> bool:
         """Execute a planned single-source peer transfer. Returns False —
         without charging the link — when the plan went stale mid-flight
         (the peer left the cluster after ``plan_gen``, its copy vanished,
@@ -608,7 +622,11 @@ class ClusterNode:
                     t0 = time.perf_counter()
                     out = os.fdopen(fd, "wb")
                     try:
-                        got = peer.read_model(key, out.write)
+                        if ctx is not None and _accepts_kwarg(
+                                peer.read_model, "ctx"):
+                            got = peer.read_model(key, out.write, ctx=ctx)
+                        else:  # legacy peer surface (test doubles)
+                            got = peer.read_model(key, out.write)
                     finally:
                         out.close()
                     wire_seconds = time.perf_counter() - t0
@@ -647,7 +665,8 @@ class ClusterNode:
         self.directory.publish(self.name, key, Tier.DISK)
         return True
 
-    def fetch_for(self, key: ModelKey, timings, on_shard=None) -> bool:
+    def fetch_for(self, key: ModelKey, timings, on_shard=None,
+                  ctx=None) -> bool:
         """MRM ``remote_fetch`` hook: resolve a DISK miss from the cheapest
         source. Returns True when the model was pulled from the cluster (a
         peer, or a §8 multi-source gather); False hands the miss back to
@@ -662,14 +681,18 @@ class ClusterNode:
         digest-verified shard as the gather assembles it, in plan order —
         layer-planned shards therefore announce readiness in execution
         order. Whole-file pulls (peer copy, coalesced gather) fire no
-        callbacks; the caller streams from local disk once landed."""
+        callbacks; the caller streams from local disk once landed.
+
+        ``ctx`` (optional RequestContext, DESIGN.md §12) rides on every
+        peer data-plane call this fetch makes, so the serving daemons see
+        the same tenant/deadline the local open carries."""
         key = ModelKey(*key)
         obj = self.mrm.objectstore
         if (self.gather_enabled and obj is not None
                 and hasattr(obj, "stat")):
             st = obj.stat(key)
             if st and st.get("shards") and self._gather(key, st, timings,
-                                                        on_shard):
+                                                        on_shard, ctx=ctx):
                 return True
         for _ in range(3):  # bounded re-plans on directory-epoch changes
             # snapshot the epoch BEFORE scanning holders: a node dropped
@@ -688,7 +711,7 @@ class ClusterNode:
             if source != "peer":
                 return False
             if self._pull_from_peer(key, peer, peer_tier, peer_s, nbytes,
-                                    ratio, timings, plan_gen):
+                                    ratio, timings, plan_gen, ctx=ctx):
                 return True
         return False
 
@@ -769,18 +792,29 @@ class ClusterNode:
         return rows, modeled, gen
 
     def _read_peer_shard(self, peer: Optional["ClusterNode"],
-                         key: ModelKey, st: dict, srow: dict) -> bytes:
+                         key: ModelKey, st: dict, srow: dict,
+                         ctx=None) -> bytes:
         """Pull one shard from a peer — a slice of its whole-model file or
         its shard-cache copy — digest-verified. Raises on stale hints,
         transport failure, and corruption; the gather falls back to
         CLOUD. Works against an in-process ClusterNode or a remote
-        PeerStub alike (the peer data-plane surface, DESIGN.md §11)."""
+        PeerStub alike (the peer data-plane surface, DESIGN.md §11);
+        ``ctx`` rides along when the peer's surface accepts it (legacy
+        test doubles are called without)."""
         if peer is None:
             raise _StaleSourceError("peer left the cluster")
         if peer.has_model(key):
-            data = peer.read_model_ranges(key, shard_ranges(st, srow))
+            if ctx is not None and _accepts_kwarg(peer.read_model_ranges,
+                                                  "ctx"):
+                data = peer.read_model_ranges(key, shard_ranges(st, srow),
+                                              ctx=ctx)
+            else:
+                data = peer.read_model_ranges(key, shard_ranges(st, srow))
         elif peer.has_shard(key, srow["index"]):
-            data = peer.read_shard(key, srow["index"])
+            if ctx is not None and _accepts_kwarg(peer.read_shard, "ctx"):
+                data = peer.read_shard(key, srow["index"], ctx=ctx)
+            else:
+                data = peer.read_shard(key, srow["index"])
         else:
             raise _StaleSourceError("stale shard hint")
         if (len(data) != srow["nbytes"]
@@ -790,7 +824,7 @@ class ClusterNode:
         return data
 
     def _fetch_one_shard(self, key: ModelKey, st: dict, row: dict,
-                         plan_gen: int, acct: dict) -> bytes:
+                         plan_gen: int, acct: dict, ctx=None) -> bytes:
         """Resolve one shard of a gather: planned source first, CLOUD as
         the transparent fallback for dead/stale/corrupt sources. Never
         raises for a recoverable source failure — only when the CLOUD leg
@@ -826,7 +860,7 @@ class ClusterNode:
             peer = self.directory.node(node_name)
             try:
                 t0 = time.perf_counter()
-                data = self._read_peer_shard(peer, key, st, srow)
+                data = self._read_peer_shard(peer, key, st, srow, ctx=ctx)
                 wire_seconds = time.perf_counter() - t0
                 with self._metrics_lock:
                     self.metrics["shards_from_peers"] += 1
@@ -862,7 +896,7 @@ class ClusterNode:
         return data
 
     def _gather(self, key: ModelKey, st: dict, timings,
-                on_shard=None) -> bool:
+                on_shard=None, ctx=None) -> bool:
         """Multi-source collective staging (§8): assemble ``key`` on local
         disk from its shard table, pulling from several sources in
         parallel. Returns False when a single source is modeled cheaper
@@ -887,7 +921,7 @@ class ClusterNode:
                 return True
             return False
         try:
-            ev.ok = self._gather_run(key, st, timings, on_shard)
+            ev.ok = self._gather_run(key, st, timings, on_shard, ctx=ctx)
         finally:
             with self._gather_lock:
                 del self._gather_inflight[key]
@@ -895,7 +929,7 @@ class ClusterNode:
         return ev.ok
 
     def _gather_run(self, key: ModelKey, st: dict, timings,
-                    on_shard=None) -> bool:
+                    on_shard=None, ctx=None) -> bool:
         plan = self.plan_shard_sources(key, st)
         if plan is None:
             return False
@@ -914,36 +948,88 @@ class ClusterNode:
         if singles and min(singles) <= gather_s:
             return False
         dst = self.mrm.disk.path_for(key)
-        acct = {"loads": {}, "wire_bytes": 0,
-                "wire_s": 0.0, "wire_meas_bytes": 0}
+        # one fetch worker per distinct source (the cost model's parallel
+        # links, §8): each link's shards transfer serially ON that link —
+        # matching the per-source load accumulation the planner priced —
+        # while distinct links genuinely overlap on the wire (remote peers
+        # are reached over *dedicated* per-call connections, so two peer
+        # sources never serialize on a shared stub socket). The consumer
+        # drains results in plan (= execution) order — a reorder buffer —
+        # so assembly writes and ``on_shard`` readiness stay the §9 feed.
+        groups: Dict[tuple, List[dict]] = {}
+        for row in rows:
+            groups.setdefault((row["source"], row["node"]), []).append(row)
+        accts = {gid: {"loads": {}, "wire_bytes": 0,
+                       "wire_s": 0.0, "wire_meas_bytes": 0}
+                 for gid in groups}
+        owner = {row["index"]: (row["source"], row["node"]) for row in rows}
+        results: Dict[int, object] = {}   # shard index -> bytes | exception
+        outstanding = {gid: 0 for gid in groups}  # fetched, not yet consumed
+        cond = threading.Condition()
+        abort = threading.Event()
+        depth = 4  # per-link lookahead bound (memory, as run_pipeline had)
+        fetch_kwargs = {}  # monkeypatched legacy fetchers lack the kwarg
+        if ctx is not None and _accepts_kwarg(self._fetch_one_shard, "ctx"):
+            fetch_kwargs["ctx"] = ctx
+
+        def link_worker(gid, my_rows):
+            for i, row in enumerate(my_rows):
+                with cond:
+                    while outstanding[gid] >= depth and not abort.is_set():
+                        cond.wait()
+                if abort.is_set():
+                    return
+                try:
+                    data = self._fetch_one_shard(key, st, row, plan_gen,
+                                                 accts[gid], **fetch_kwargs)
+                except BaseException as e:  # noqa: BLE001 — re-raised by
+                    with cond:              # the consumer, in plan order
+                        for r2 in my_rows[i:]:
+                            results[r2["index"]] = e
+                        cond.notify_all()
+                    return
+                with cond:
+                    results[row["index"]] = data
+                    outstanding[gid] += 1
+                    cond.notify_all()
+
         try:
             with atomic_dest_file(dst, prefix=".gather-") as (fd, tmp):
                 try:
                     os.ftruncate(fd, st["nbytes"])
-
-                    def shard_fetch(row):
-                        return row, self._fetch_one_shard(key, st, row,
-                                                          plan_gen, acct)
-
-                    def assemble(item):
-                        row, data = item
-                        off = 0
-                        for ro, rn in (row.get("ranges")
-                                       or [(row["offset"], row["nbytes"])]):
-                            os.pwrite(fd, data[off:off + rn], ro)
-                            off += rn
-                        # shard bytes are digest-verified by the fetch leg;
-                        # rows arrive in plan (= execution) order, so this
-                        # is the per-layer readiness feed (DESIGN.md §9)
-                        if on_shard is not None:
-                            on_shard(row, data)
-                        return len(data)
-
-                    run_pipeline(rows,
-                                 [("shard_fetch", shard_fetch,
-                                   lambda r: len(r[1])),
-                                  ("assemble", assemble)],
-                                 depth=4)
+                    workers = [threading.Thread(
+                        target=link_worker, args=(gid, grows), daemon=True,
+                        name=f"gather-{gid[0]}-{gid[1] or 'self'}")
+                        for gid, grows in groups.items()]
+                    for w in workers:
+                        w.start()
+                    try:
+                        for row in rows:  # plan order: the reorder buffer
+                            with cond:
+                                while row["index"] not in results:
+                                    cond.wait()
+                                data = results.pop(row["index"])
+                                outstanding[owner[row["index"]]] -= 1
+                                cond.notify_all()
+                            if isinstance(data, BaseException):
+                                raise data
+                            off = 0
+                            for ro, rn in (row.get("ranges")
+                                           or [(row["offset"],
+                                                row["nbytes"])]):
+                                os.pwrite(fd, data[off:off + rn], ro)
+                                off += rn
+                            # shard bytes are digest-verified by the fetch
+                            # leg; consumed in plan (= execution) order, so
+                            # this is the per-layer readiness feed (§9)
+                            if on_shard is not None:
+                                on_shard(row, data)
+                    finally:
+                        abort.set()
+                        with cond:
+                            cond.notify_all()
+                        for w in workers:
+                            w.join()
                 finally:
                     os.close(fd)
                 h = hashlib.sha256()
@@ -954,6 +1040,16 @@ class ClusterNode:
                     raise IOError(f"{key}: gathered assembly digest mismatch")
         except (OSError, LookupError):
             return False  # the MRM's CLOUD fall-through re-fetches whole
+        # merge per-link accounting — each worker mutated only its own
+        # dict, so no locks were needed on the hot fetch path
+        acct = {"loads": {}, "wire_bytes": 0, "wire_s": 0.0,
+                "wire_meas_bytes": 0}
+        for a in accts.values():
+            for lk, lv in a["loads"].items():
+                acct["loads"][lk] = acct["loads"].get(lk, 0.0) + lv
+            acct["wire_bytes"] += a["wire_bytes"]
+            acct["wire_s"] += a["wire_s"]
+            acct["wire_meas_bytes"] += a["wire_meas_bytes"]
         # charge the gather at the links (and wire bytes) it actually used
         gather_s = self.hw.gather_time(acct["loads"].values(),
                                        acct["wire_bytes"])

@@ -28,6 +28,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 from repro.core.cache import Tier
 from repro.core.client import LoadedModel, TrimsClient, cold_load, free_model
 from repro.core.mrm import MRM, ModelKey
+from repro.core.tenant import AdmissionError, RequestContext
 
 
 class IsolationError(PermissionError):
@@ -125,19 +126,31 @@ class Container:
         self._trims = (TrimsClient(platform.mrm, client_id=self.cid)
                        if platform.mrm is not None and use_trims else None)
         self._lock = threading.RLock()
+        # the invoking request's RequestContext, set by FaaSPlatform.invoke
+        # for the duration of the function body (thread-local: concurrent
+        # invokes of one container each see their own context)
+        self._ctx_tls = threading.local()
+
+    @property
+    def current_ctx(self) -> Optional[RequestContext]:
+        """The RequestContext of the request this thread is serving."""
+        return getattr(self._ctx_tls, "ctx", None)
 
     # -- the API surface user functions see --------------------------------
-    def load_model(self, framework: str, name: str, version: str = "1") -> LoadedModel:
+    def load_model(self, framework: str, name: str, version: str = "1",
+                   ctx: Optional[RequestContext] = None) -> LoadedModel:
         key = ModelKey(framework, name, version)
         if self.allowed is not None and (framework, name) not in self.allowed:
             raise IsolationError(
                 f"{self.cid}: function {self.fn_name!r} is not entitled to {key}")
+        if ctx is None:
+            ctx = self.current_ctx  # the invoking request's context
         with self._lock:
             if key in self._models:
                 return self._models[key]
             t0 = time.perf_counter()
             if self._trims is not None:
-                h = self._trims.open(framework, name, version)
+                h = self._trims.open(framework, name, version, ctx=ctx)
                 m = LoadedModel(key, h.weights, h.nbytes, h.timings,
                                 via_trims=True, handle=h)
             else:
@@ -149,7 +162,8 @@ class Container:
             self._models[key] = m
             return m
 
-    def prefetch_models(self, models: Sequence[Tuple[str, ...]]) -> list:
+    def prefetch_models(self, models: Sequence[Tuple[str, ...]],
+                        ctx: Optional[RequestContext] = None) -> list:
         """Warm entitled models toward the device tier without taking refs.
 
         Non-entitled or missing models are skipped (a warm-up hint must
@@ -164,7 +178,7 @@ class Container:
                 continue
             if not self.platform.can_resolve(ModelKey(fw, name, version)):
                 continue
-            futs.append(self._trims.prefetch(fw, name, version))
+            futs.append(self._trims.prefetch(fw, name, version, ctx=ctx))
         return futs
 
     def unload_model(self, m: LoadedModel):
@@ -198,7 +212,7 @@ class FaaSPlatform:
     """One node: containers + (optionally) a TrIMS MRM."""
 
     def __init__(self, mrm: Optional[MRM], disk=None, name: str = "node0",
-                 cluster_node=None, objectstore=None):
+                 cluster_node=None, objectstore=None, tenants=None):
         self.mrm = mrm
         self.disk = disk if disk is not None else (mrm.disk if mrm else None)
         # CLOUD tier for the no-MRM baseline path (four-tier parity: an
@@ -210,8 +224,19 @@ class FaaSPlatform:
         # optional core.cluster.ClusterNode backing this platform — set when
         # the node participates in cluster-wide sharing (DESIGN.md §6)
         self.cluster_node = cluster_node
+        # multi-tenant isolation (DESIGN.md §12): a TenantRegistry attaches
+        # to the MRM (quota accounting + fair-share eviction weights) and
+        # arms invoke-time admission control; None = single-tenant behavior
+        self.tenants = tenants
+        if tenants is not None and mrm is not None and mrm.tenants is not tenants:
+            tenants.attach(mrm)
         self.functions: Dict[str, FunctionSpec] = {}
         self.containers: Dict[str, Container] = {}
+        # per-tenant SLO accounting, keyed by RequestContext.tenant —
+        # mutated under _acct_lock (a leaf lock; never hold it while
+        # calling into the MRM or a container)
+        self.tenant_acct: Dict[str, Accounting] = {}
+        self._acct_lock = threading.Lock()
         self._lock = threading.RLock()
 
     def deploy(self, name: str, fn: Callable, allowed_models=None,
@@ -243,11 +268,12 @@ class FaaSPlatform:
                 and self.cluster_node.directory.warmest(
                     key, exclude=self.cluster_node.name) is not None)
 
-    def prefetch_models(self, keys: Sequence[ModelKey]) -> list:
+    def prefetch_models(self, keys: Sequence[ModelKey],
+                        ctx: Optional[RequestContext] = None) -> list:
         """Node-level warm-up (router pre-dispatch hint)."""
         if self.mrm is None:
             return []
-        return [self.mrm.prefetch(ModelKey(*k)) for k in keys
+        return [self.mrm.prefetch(ModelKey(*k), ctx=ctx) for k in keys
                 if self.can_resolve(k)]
 
     def undeploy(self, name: str):
@@ -257,21 +283,51 @@ class FaaSPlatform:
         if c is not None:
             c.teardown()
 
+    def _tier_frac(self, cache) -> float:
+        with cache.lock:
+            return cache.used / cache.capacity if cache.capacity else 1.0
+
     def invoke(self, name: str, payload: Any = None,
-               deadline_s: Optional[float] = None) -> Any:
-        """Run one request. ``deadline_s`` is the request's SLO budget:
-        it seeds the MRM's eviction-policy horizon before the function
-        runs (DESIGN.md §7) and is scored against the measured latency
-        afterwards (per-container violation accounting)."""
+               deadline_s: Optional[float] = None,
+               ctx: Optional[RequestContext] = None) -> Any:
+        """Run one request under an optional :class:`RequestContext`.
+
+        ``ctx`` carries tenant/SLO class/deadline/priority; the legacy
+        ``deadline_s=`` keyword still works and wraps into a
+        default-tenant context (validated once, at the context boundary).
+        The deadline seeds the MRM's eviction-policy horizon before the
+        function runs (DESIGN.md §7) and is scored against the measured
+        latency afterwards, into BOTH the container's and the tenant's
+        accounting. With a :class:`~repro.core.tenant.TenantRegistry`
+        attached, batch-class work is admission-checked first and an
+        :class:`AdmissionError` (action ``"shed"`` or ``"queue"``) is
+        raised instead of running the function. The context is visible to
+        the function body via ``container.current_ctx`` and flows into
+        every ``load_model`` it performs."""
+        ctx = RequestContext.coerce(ctx, deadline_s)
+        deadline = ctx.deadline_s if ctx is not None else None
         with self._lock:
             spec = self.functions.get(name)
             c = self.containers.get(name)
         if spec is None or c is None:
             raise KeyError(f"function {name!r} not deployed")
-        if deadline_s is not None and self.mrm is not None:
-            self.mrm.note_deadline(deadline_s)
+        if self.tenants is not None and ctx is not None:
+            device_frac = (self._tier_frac(self.mrm.device)
+                           if self.mrm is not None else 0.0)
+            host_frac = (self._tier_frac(self.mrm.host)
+                         if self.mrm is not None else 0.0)
+            verdict = self.tenants.admit(ctx, device_frac, host_frac)
+            if verdict != "admit":
+                raise AdmissionError(verdict, ctx, "tiers under pressure")
+        if deadline is not None and self.mrm is not None:
+            self.mrm.note_deadline(deadline)
+        prev = getattr(c._ctx_tls, "ctx", None)
+        c._ctx_tls.ctx = ctx
         t0 = time.perf_counter()
-        out = spec.fn(c, payload)
+        try:
+            out = spec.fn(c, payload)
+        finally:
+            c._ctx_tls.ctx = prev
         dt = time.perf_counter() - t0
         # accounting mutates under the container lock: concurrent invokes
         # of one function must not lose updates (read-modify-write races)
@@ -279,11 +335,22 @@ class FaaSPlatform:
             c.acct.invocations += 1
             c.acct.total_s += dt
             c.acct.latencies.append(dt)
-            if deadline_s is not None:
+            if deadline is not None:
                 c.acct.slo_invocations += 1
-                c.acct.slo_slack_s += deadline_s - dt
-                if dt > deadline_s:
+                c.acct.slo_slack_s += deadline - dt
+                if dt > deadline:
                     c.acct.slo_violations += 1
+        if ctx is not None:
+            with self._acct_lock:
+                ta = self.tenant_acct.setdefault(ctx.tenant, Accounting())
+                ta.invocations += 1
+                ta.total_s += dt
+                ta.latencies.append(dt)
+                if deadline is not None:
+                    ta.slo_invocations += 1
+                    ta.slo_slack_s += deadline - dt
+                    if dt > deadline:
+                        ta.slo_violations += 1
         return out
 
     def invoke_pipeline(self, names: Sequence[str], payload: Any = None) -> Any:
@@ -411,7 +478,10 @@ class Router:
         self.dispatches: Dict[str, int] = {n.name: 0 for n in self.nodes}
 
     def route(self, fn_name: str, needed_models: Sequence[ModelKey] = (),
-              deadline_s: Optional[float] = None) -> FaaSPlatform:
+              deadline_s: Optional[float] = None,
+              ctx: Optional[RequestContext] = None) -> FaaSPlatform:
+        ctx = RequestContext.coerce(ctx, deadline_s)
+        deadline_s = ctx.deadline_s if ctx is not None else None
         candidates = [n for n in self.nodes if fn_name in n.functions]
         if not candidates:
             raise KeyError(f"function {fn_name!r} not deployed on any node")
@@ -435,14 +505,17 @@ class Router:
         return min(candidates, key=score)
 
     def invoke(self, fn_name: str, payload=None, needed_models=(),
-               deadline_s: Optional[float] = None):
+               deadline_s: Optional[float] = None,
+               ctx: Optional[RequestContext] = None):
         """Route, issue prefetch for the needed models on the chosen node,
         then dispatch — staging overlaps the dispatch/queueing latency.
-        ``deadline_s`` flows into routing (slack tie-break) and down to the
-        node's SLO accounting."""
-        node = self.route(fn_name, needed_models, deadline_s=deadline_s)
+        The request's context (or the legacy bare ``deadline_s``, which
+        wraps into one) flows into routing (slack tie-break), the prefetch
+        hint's tenant attribution, and the node's SLO accounting."""
+        ctx = RequestContext.coerce(ctx, deadline_s)
+        node = self.route(fn_name, needed_models, ctx=ctx)
         with self._lock:
             self.dispatches[node.name] = self.dispatches.get(node.name, 0) + 1
         if needed_models:
-            node.prefetch_models(needed_models)
-        return node.invoke(fn_name, payload, deadline_s=deadline_s)
+            node.prefetch_models(needed_models, ctx=ctx)
+        return node.invoke(fn_name, payload, ctx=ctx)

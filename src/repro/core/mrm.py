@@ -39,6 +39,7 @@ from repro.core.costmodel import (HardwareModel, PIPELINE_CHUNK_BYTES,
 from repro.core.pipeline import plan_chunks, run_pipeline
 from repro.core.slo import DEFAULT_HORIZON_S, SLOState
 from repro.core.store import CloudStore, DiskStore, ModelFile, _np_dtype
+from repro.core.tenant import RequestContext
 
 # write-back queue shutdown sentinel (MRM.shutdown)
 _WB_SENTINEL = object()
@@ -183,9 +184,11 @@ class LoadFuture:
     def __init__(self, key: ModelKey, tier: str = "device",
                  want_handle: bool = True, activation_bytes: int = 0,
                  granularity: str = "model", streaming: bool = False,
-                 components: Optional[tuple] = None):
+                 components: Optional[tuple] = None,
+                 ctx: Optional[RequestContext] = None):
         self.key = key
         self.tier = tier
+        self.ctx = ctx
         self.want_handle = want_handle
         self.activation_bytes = activation_bytes
         self.granularity = granularity
@@ -363,6 +366,11 @@ class MRM:
         # arrival predictor feeds per-tier CostAware policies whose reload
         # cost is priced from each tier's own backing tier
         self.slo: Optional[SLOState] = None
+        # multi-tenant isolation (DESIGN.md §12): set by
+        # TenantRegistry.attach — when present, context-carrying opens are
+        # attributed per tenant, quota/deadline admission may degrade a
+        # device open to host tier, and CostAware eviction is share-weighted
+        self.tenants = None
         device_policy = host_policy = policy
         if policy == CostAware.name:
             self.slo = SLOState(self.hw, self._device_backing_tier,
@@ -412,6 +420,10 @@ class MRM:
             # modeled reload seconds attributable to earlier evictions
             "mispredicted_evictions": 0, "demotion_saved_reloads": 0,
             "evicted_reload_stalls": 0, "slo_stall_s": 0.0,
+            # tenancy admission (DESIGN.md §12): device opens degraded to
+            # host tier because the deadline was already infeasible, or
+            # because the tenant's device quota was exhausted
+            "admission_degraded": 0, "quota_degraded": 0,
         }
         # eviction-attribution state: device victims awaiting a possible
         # return (key -> (t_evict, predicted_next_use_s)), keys whose
@@ -482,12 +494,15 @@ class MRM:
                 return Tier.DEVICE
         return Tier.DISK if self.disk.contains(key) else None
 
-    def note_deadline(self, deadline_s: Optional[float]) -> None:
+    def note_deadline(self, deadline_s: Optional[float] = None) -> None:
         """Fold a request deadline into the eviction policy's horizon
         (no-op unless ``policy=\"slo\"``) — the FaaS layer calls this on
-        every deadline-carrying invoke (DESIGN.md §7)."""
-        if self.slo is not None and deadline_s:
-            self.slo.note_deadline(deadline_s)
+        every deadline-carrying invoke (DESIGN.md §7). ``None`` is a safe
+        no-op; anything else is validated once, at the RequestContext
+        boundary (``repro.core.tenant``)."""
+        ctx = RequestContext.coerce(deadline_s=deadline_s)
+        if self.slo is not None and ctx is not None:
+            self.slo.note_deadline(ctx.deadline_s)
 
     def _now(self) -> float:
         return self.slo.now() if self.slo is not None else time.monotonic()
@@ -561,20 +576,97 @@ class MRM:
 
         fut.add_done_callback(account)
 
+    # ------------------------------------------------ tenancy & admission
+    def _nbytes_hint(self, key: ModelKey) -> int:
+        """Best-effort size of ``key`` from the warmest source that knows it
+        (tier entry, local file, CLOUD manifest); 0 when nobody does."""
+        for cache in (self.device, self.host):
+            e = cache.peek(key)
+            if e is not None:
+                return e.nbytes
+        if self.disk.contains(key):
+            try:
+                import os
+                return os.path.getsize(self.disk.path_for(key))
+            except OSError:
+                pass
+        obj = self.objectstore
+        if obj is not None and hasattr(obj, "stat"):
+            st = obj.stat(key)
+            if st:
+                return st.get("nbytes", 0)
+        return 0
+
+    def estimated_ready_s(self, key: ModelKey) -> float:
+        """Modeled seconds until ``key`` could be DEVICE-resident here,
+        priced from its current warmest tier (0 for a device hit, H2D for
+        host, the pipelined staging chain for disk, cloud fetch on top for
+        absent) — the per-key admission analogue of
+        ``FaaSPlatform.estimated_ready_s``."""
+        key = ModelKey(*key)
+        if self.device.peek(key) is not None:
+            return 0.0
+        nbytes = self._nbytes_hint(key)
+        if self.host.peek(key) is not None:
+            return self.hw.h2d_time(nbytes)
+        if self.disk.contains(key):
+            return self.hw.staging_pipelined_time(nbytes)
+        return (self.hw.cloud_fetch_time(nbytes)
+                + self.hw.staging_pipelined_time(nbytes))
+
+    def _admit_tier(self, key: ModelKey, ctx: RequestContext,
+                    tier: str) -> str:
+        """Context-aware staging-tier decision (DESIGN.md §12), active only
+        when a :class:`~repro.core.tenant.TenantRegistry` is attached.
+        A device open degrades to host when (a) the modeled time-to-ready
+        already blows the request's deadline — device staging would burn
+        H2D bandwidth on a request that has lost — or (b) the tenant's
+        hard device-byte quota is exhausted. Both leave the request
+        *served* (host-resident weights) and count in ``metrics``."""
+        if tier != "device" or self.tenants is None:
+            return tier
+        if (ctx.deadline_s is not None
+                and self.estimated_ready_s(key) > ctx.deadline_s):
+            with self._lock:
+                self.metrics["admission_degraded"] += 1
+            self.tenants.note_degraded(ctx.tenant)
+            return "host"
+        if self.tenants.would_exceed(ctx.tenant, "device",
+                                     self._nbytes_hint(key)):
+            with self._lock:
+                self.metrics["quota_degraded"] += 1
+            self.tenants.note_degraded(ctx.tenant)
+            return "host"
+        return tier
+
+    def _note_ctx(self, key: ModelKey, ctx: Optional[RequestContext]) -> None:
+        if ctx is not None and self.tenants is not None:
+            self.tenants.note_open(key, ctx.tenant)
+
     # ------------------------------------------------------------------ API
     def open_async(self, key: ModelKey, activation_bytes: int = 0,
                    granularity: str = "model", tier: str = "device",
                    want_handle: bool = True,
-                   _inline: bool = False) -> LoadFuture:
+                   _inline: bool = False,
+                   ctx: Optional[RequestContext] = None) -> LoadFuture:
         """Resolve a model asynchronously; returns a :class:`LoadFuture`.
 
         A tier hit completes the future before returning. Otherwise the
         future either coalesces onto the in-flight load of the same key or
         becomes the loader itself (in a background thread, or in the calling
         thread when ``_inline`` — the synchronous :meth:`open` path).
+
+        ``ctx`` (optional :class:`~repro.core.tenant.RequestContext`)
+        attributes the staged bytes to a tenant and arms quota/deadline
+        admission when a registry is attached; without a registry it is
+        inert metadata, so legacy callers are unchanged.
         """
-        fut = LoadFuture(ModelKey(*key), tier, want_handle,
-                         activation_bytes, granularity)
+        key = ModelKey(*key)
+        self._note_ctx(key, ctx)
+        if ctx is not None:
+            tier = self._admit_tier(key, ctx, tier)
+        fut = LoadFuture(key, tier, want_handle,
+                         activation_bytes, granularity, ctx=ctx)
         with self._lock:
             if want_handle:
                 self.metrics["opens"] += 1
@@ -585,22 +677,25 @@ class MRM:
         return fut
 
     def open(self, key: ModelKey, activation_bytes: int = 0,
-             granularity: str = "model", tier: str = "device") -> ModelHandle:
+             granularity: str = "model", tier: str = "device",
+             ctx: Optional[RequestContext] = None) -> ModelHandle:
         """Blocking open: ``open_async(...).result()``.
 
         ``tier="host"`` returns host-resident numpy views without device
         staging — the cross-process (shm_ipc) path.
         """
         return self.open_async(key, activation_bytes, granularity, tier,
-                               _inline=True).result()
+                               _inline=True, ctx=ctx).result()
 
-    def prefetch(self, key: ModelKey, tier: str = "device") -> LoadFuture:
+    def prefetch(self, key: ModelKey, tier: str = "device",
+                 ctx: Optional[RequestContext] = None) -> LoadFuture:
         """Warm ``key`` into ``tier`` in the background without taking a
         reference; the future resolves to ``None`` when the tier is warm."""
-        return self.open_async(key, tier=tier, want_handle=False)
+        return self.open_async(key, tier=tier, want_handle=False, ctx=ctx)
 
     def open_stream(self, key: ModelKey, want_handle: bool = True,
-                    components: Optional[tuple] = None) -> LoadFuture:
+                    components: Optional[tuple] = None,
+                    ctx: Optional[RequestContext] = None) -> LoadFuture:
         """Partial open (DESIGN.md §9): a host-tier open whose future
         exposes per-layer readiness — ``wait_prefix``/``windows_ready``
         fire as each layer window's bytes land and verify, in execution
@@ -623,9 +718,11 @@ class MRM:
         if self.use_shm:
             # shm segments are carved per-tensor up front and shared by
             # name — per-window scatter into them is not supported
-            return self.open_async(key, tier="host", want_handle=want_handle)
+            return self.open_async(key, tier="host", want_handle=want_handle,
+                                   ctx=ctx)
+        self._note_ctx(key, ctx)
         fut = LoadFuture(key, tier="host", want_handle=want_handle,
-                         streaming=True, components=components)
+                         streaming=True, components=components, ctx=ctx)
         with self._lock:
             if want_handle:
                 self.metrics["opens"] += 1
@@ -837,24 +934,29 @@ class MRM:
                     host_entry.refcount -= 1
         return self._finish_entry(fut, self.device, dev_entry, unpin=True)
 
-    def _ensure_on_disk(self, key, timings, on_shard=None):
+    def _ensure_on_disk(self, key, timings, on_shard=None, ctx=None):
         """DISK-miss fall-through (DESIGN.md §6): peer link first when a
         cluster hook is attached and picks a cheaper source, then the CLOUD
         tier (content-addressed ObjectStore, or the legacy CloudStore).
 
         ``on_shard(row, data)`` (streaming opens, §9) is forwarded to any
         source that can deliver digest-verified shards incrementally —
-        the cluster gather and the ObjectStore's sharded fetch. Sources
-        that predate the kwarg (legacy hooks/stores) are called without
-        it; the caller then streams from disk after the file lands."""
+        the cluster gather and the ObjectStore's sharded fetch. ``ctx``
+        (the request's :class:`~repro.core.tenant.RequestContext`) rides
+        along to a context-aware cluster hook so the serving peers see the
+        same tenant/deadline the local open carries. Sources that predate
+        either kwarg (legacy hooks/stores) are called without it; the
+        caller then streams from disk after the file lands."""
         if self.disk.contains(key):
             return
         if self.remote_fetch is not None:
+            kwargs = {}
             if on_shard is not None and _accepts_kwarg(self.remote_fetch,
                                                        "on_shard"):
-                ok = self.remote_fetch(key, timings, on_shard=on_shard)
-            else:
-                ok = self.remote_fetch(key, timings)
+                kwargs["on_shard"] = on_shard
+            if ctx is not None and _accepts_kwarg(self.remote_fetch, "ctx"):
+                kwargs["ctx"] = ctx
+            ok = self.remote_fetch(key, timings, **kwargs)
             if ok:
                 if timings.tier_hit in ("", "disk"):
                     # the hook may claim a more specific hit ("gather", §8)
@@ -1019,7 +1121,7 @@ class MRM:
         I/O overlaps deserialization overlaps device staging (DESIGN.md §4).
         """
         key, timings = fut.key, fut.timings
-        self._ensure_on_disk(key, timings)
+        self._ensure_on_disk(key, timings, ctx=fut.ctx)
         with self._evict_lock:
             self._demoted_keys.discard(key)  # any demoted copy lapsed
         mf = self.disk.open(key)
@@ -1136,7 +1238,8 @@ class MRM:
 
         Returns the entry STILL PINNED; the caller releases the pin once
         the handle refcount (or device staging) no longer needs it."""
-        self._ensure_on_disk(key, timings)
+        self._ensure_on_disk(key, timings,
+                             ctx=fut.ctx if fut is not None else None)
         with self._evict_lock:
             self._demoted_keys.discard(key)  # any demoted copy lapsed
         mf = self.disk.open(key)
@@ -1233,7 +1336,7 @@ class MRM:
                   and _accepts_kwarg(self.remote_fetch, "on_shard")):
             # no incremental wire source at all: land the file first and
             # stream only the deserialize leg
-            self._ensure_on_disk(key, timings)
+            self._ensure_on_disk(key, timings, ctx=fut.ctx)
             est = self.disk.open(key).total_bytes
 
         state = {"entry": None, "adopted": None}
@@ -1277,7 +1380,8 @@ class MRM:
         asm = StreamAssembler(on_plan, on_window, components=fut.components)
         try:
             fut.stage = "disk_read"
-            self._ensure_on_disk(key, timings, on_shard=asm.feed_shard)
+            self._ensure_on_disk(key, timings, on_shard=asm.feed_shard,
+                                 ctx=fut.ctx)
             with self._evict_lock:
                 self._demoted_keys.discard(key)  # any demoted copy lapsed
             mf = self.disk.open(key)

@@ -40,6 +40,7 @@ from repro.core.cache import Tier
 from repro.core.cluster import ClusterDirectory, ClusterNode
 from repro.core.mrm import MRM, ModelKey
 from repro.core.store import DiskStore
+from repro.core.tenant import RequestContext
 from repro.core.transport import (DEFAULT_CALL_TIMEOUT_S, LoopbackTransport,
                                   SocketServer, SocketTransport,
                                   TransportError)
@@ -111,7 +112,7 @@ class PeerStub:
         return None  # remote: no local file — peer wire streams raw
 
     # -- data plane (errors propagate: the caller re-plans) -----------------
-    def read_model(self, key: ModelKey, write) -> int:
+    def read_model(self, key: ModelKey, write, ctx=None) -> int:
         # count the bytes the sink actually received — never trust the
         # server-reported nbytes for validation (a desynced/duplicated
         # stream would pass it while the sink holds garbage), and the
@@ -124,22 +125,38 @@ class PeerStub:
             write(chunk)
 
         resp = self.transport.call_stream(
-            {"op": "fetch_model", "key": _wire_key(key)}, counted)
+            self._with_ctx({"op": "fetch_model", "key": _wire_key(key)}, ctx),
+            counted)
         nbytes = resp.get("nbytes")
         if nbytes is not None and got != nbytes:
             raise TransportError(f"{self.name}: fetch_model delivered "
                                  f"{got} of {nbytes} bytes")
         return got
 
-    def read_model_ranges(self, key: ModelKey, ranges) -> bytes:
+    # shard reads (the gather data plane, DESIGN.md §8) run on dedicated
+    # ephemeral connections: concurrent shard sources must overlap on the
+    # wire instead of serializing on the stub's pooled connection. A
+    # dedicated exchange has no retry (nothing stale to retry) — the
+    # gather's own re-plan/CLOUD fallback handles the failure.
+    def read_model_ranges(self, key: ModelKey, ranges, ctx=None) -> bytes:
         return self.transport.call(
-            {"op": "read_ranges", "key": _wire_key(key),
-             "ranges": [list(r) for r in ranges]})["data"]
+            self._with_ctx({"op": "read_ranges", "key": _wire_key(key),
+                            "ranges": [list(r) for r in ranges]}, ctx),
+            dedicated=True)["data"]
 
-    def read_shard(self, key: ModelKey, index: int) -> bytes:
+    def read_shard(self, key: ModelKey, index: int, ctx=None) -> bytes:
         return self.transport.call(
-            {"op": "fetch_shard", "key": _wire_key(key),
-             "index": index})["data"]
+            self._with_ctx({"op": "fetch_shard", "key": _wire_key(key),
+                            "index": index}, ctx),
+            dedicated=True)["data"]
+
+    @staticmethod
+    def _with_ctx(req: dict, ctx) -> dict:
+        """Attach optional RequestContext metadata (DESIGN.md §12) so the
+        serving daemon sees the same tenant/deadline the local open does."""
+        if ctx is not None:
+            req["ctx"] = ctx.to_wire()
+        return req
 
     def store_shard(self, key: ModelKey, index: int, data: bytes) -> None:
         self.transport.call({"op": "store_shard", "key": _wire_key(key),
@@ -532,6 +549,14 @@ class NodeDaemon:
                 raise ValueError(f"{self.name} does not host a directory")
             return self.dir_service.handle(req)
         node, mrm = self.node, self.mrm
+        # optional RequestContext metadata (DESIGN.md §12): the remote
+        # daemon sees the same tenant/deadline the originating call does —
+        # a data-plane read serving an urgent request folds that deadline
+        # into THIS node's eviction horizon, and relayed opens are
+        # tenant-attributed in this node's MRM
+        ctx = RequestContext.from_wire(req.get("ctx"))
+        if ctx is not None and ctx.deadline_s is not None:
+            mrm.note_deadline(ctx.deadline_s)
         if op == "ping":
             return {"ok": True, "name": self.name,
                     "address": self.address}
@@ -573,14 +598,14 @@ class NodeDaemon:
         if op == "open":
             return self._finish_open(
                 self.mrm.open_async(_key(req["key"]),
-                                    tier=req.get("tier", "host")),
+                                    tier=req.get("tier", "host"), ctx=ctx),
                 req.get("timeout"))
         if op == "open_begin":
             with self._lock:
                 self._open_counter += 1
                 token = f"open{self._open_counter}"
                 self._opens[token] = self.mrm.open_async(
-                    _key(req["key"]), tier=req.get("tier", "host"))
+                    _key(req["key"]), tier=req.get("tier", "host"), ctx=ctx)
             return {"ok": True, "token": token}
         if op == "open_wait":
             with self._lock:

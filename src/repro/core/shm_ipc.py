@@ -32,6 +32,7 @@ import numpy as np
 
 from repro.core.mrm import MRM, ModelKey
 from repro.core.store import _np_dtype
+from repro.core.tenant import RequestContext
 from repro.core.transport import (TransportError, recv_frame, recvn,
                                   send_frame)
 
@@ -165,9 +166,15 @@ class MRMServer:
 
     def _dispatch(self, req: dict, conn_handles: List[int]) -> dict:
         op = req.get("op")
+        # optional request context (DESIGN.md §12): old clients simply omit
+        # the key; the daemon folds the deadline into its horizon and hands
+        # the context to the MRM so cross-process opens are tenant-attributed
+        ctx = RequestContext.from_wire(req.get("ctx"))
+        if ctx is not None and ctx.deadline_s is not None:
+            self.mrm.note_deadline(ctx.deadline_s)
         if op == "open":
             key = ModelKey(req["framework"], req["name"], req.get("version", "1"))
-            h = self.mrm.open(key, tier="host")
+            h = self.mrm.open(key, tier="host", ctx=ctx)
             conn_handles.append(h.handle_id)
             host_entry = self.mrm.host.peek(key)
             hm = host_entry.payload
@@ -198,7 +205,7 @@ class MRMServer:
             key = ModelKey(req["framework"], req["name"], req.get("version", "1"))
             # fire-and-forget: the future completes in the daemon; the client
             # only needs the ack — its next open coalesces onto the load
-            self.mrm.prefetch(key, tier="host")
+            self.mrm.prefetch(key, tier="host", ctx=ctx)
             return {"ok": True}
         if op == "stats":
             return {"ok": True, "stats": self.mrm.stats()}
@@ -246,9 +253,13 @@ class RemoteTrimsClient:
             _send(self.sock, req)
             return _recv(self.sock)
 
-    def open(self, framework: str, name: str, version: str = "1") -> RemoteHandle:
-        resp = self._call({"op": "open", "framework": framework,
-                           "name": name, "version": version})
+    def open(self, framework: str, name: str, version: str = "1",
+             ctx=None) -> RemoteHandle:
+        req = {"op": "open", "framework": framework,
+               "name": name, "version": version}
+        if ctx is not None:
+            req["ctx"] = ctx.to_wire()
+        resp = self._call(req)
         if resp is None or not resp.get("ok"):
             raise RuntimeError(f"open failed: {resp}")
         t0 = time.perf_counter()
@@ -274,10 +285,14 @@ class RemoteTrimsClient:
                 pass
         self._call({"op": "close", "handle_id": h.handle_id})
 
-    def prefetch(self, framework: str, name: str, version: str = "1"):
+    def prefetch(self, framework: str, name: str, version: str = "1",
+                 ctx=None):
         """Ask the daemon to warm the host tier; returns once acknowledged."""
-        resp = self._call({"op": "prefetch", "framework": framework,
-                           "name": name, "version": version})
+        req = {"op": "prefetch", "framework": framework,
+               "name": name, "version": version}
+        if ctx is not None:
+            req["ctx"] = ctx.to_wire()
+        resp = self._call(req)
         if resp is None or not resp.get("ok"):
             raise RuntimeError(f"prefetch failed: {resp}")
 

@@ -215,8 +215,9 @@ class SLOState:
         return self.predictor.clock()
 
     def note_deadline(self, deadline_s: float) -> None:
-        if deadline_s is None or deadline_s <= 0:
-            return
+        # no None/<=0 guard here: deadlines are validated once, at the
+        # RequestContext boundary (repro.core.tenant) — callers hand this
+        # method an already-vetted positive float
         with self._lock:
             self.horizon_s = ((1 - GAP_ALPHA) * self.horizon_s
                               + GAP_ALPHA * deadline_s)

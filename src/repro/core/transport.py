@@ -233,8 +233,11 @@ class SocketTransport:
                 pass
             self._sock = None
 
-    def _exchange(self, req: dict, sink: Optional[Callable[[bytes], None]]):
-        sock = self._ensure_sock()
+    def _exchange(self, req: dict, sink: Optional[Callable[[bytes], None]],
+                  sock: Optional[socket.socket] = None):
+        pooled = sock is None
+        if pooled:
+            sock = self._ensure_sock()
         send_frame(sock, req)
         resp = recv_frame(sock)
         if resp is None:
@@ -242,9 +245,12 @@ class SocketTransport:
                                  f"awaiting response")
         # this request's own response started arriving: a carrier failure
         # from here on (mid-stream EOF/timeout) must never be retried —
-        # the sink may already hold a partial body
-        self._responded = True
-        self._fresh = False
+        # the sink may already hold a partial body. Dedicated (ephemeral)
+        # exchanges never touch the pooled connection's retry state — they
+        # run lock-free in parallel with it.
+        if pooled:
+            self._responded = True
+            self._fresh = False
         if not resp.get("ok", False):
             raise RemoteError(resp.get("error", "remote handler failed"))
         if not resp.get("stream"):
@@ -265,15 +271,32 @@ class SocketTransport:
         merged.update(trailer)
         return merged
 
-    def call(self, req: dict) -> dict:
+    def call(self, req: dict, dedicated: bool = False) -> dict:
         """One unary RPC. Raises :class:`RemoteError` on handler failure,
         :class:`TransportError` on carrier failure."""
-        return self.call_stream(req, None)
+        return self.call_stream(req, None, dedicated=dedicated)
 
     def call_stream(self, req: dict,
-                    sink: Optional[Callable[[bytes], None]]) -> dict:
+                    sink: Optional[Callable[[bytes], None]],
+                    dedicated: bool = False) -> dict:
         """One RPC whose response may stream byte chunks into ``sink``.
-        Returns the header merged with the trailer."""
+        Returns the header merged with the trailer.
+
+        ``dedicated=True`` runs the exchange on its own ephemeral
+        connection instead of the pooled one — no shared lock, so N
+        concurrent dedicated calls genuinely overlap on the wire (the
+        gather data plane, DESIGN.md §8). A fresh connection has no stale
+        state, so there is nothing to retry: carrier failures surface
+        directly and the fetch path re-plans."""
+        if dedicated:
+            sock = _connect(self.address, self.timeout_s)
+            try:
+                return self._exchange(req, sink, sock=sock)
+            finally:
+                try:
+                    sock.close()
+                except OSError:
+                    pass
         with self._lock:
             self._responded = False
             try:
@@ -317,11 +340,14 @@ class LoopbackTransport:
         self.handler = handler
         self.address = address
 
-    def call(self, req: dict) -> dict:
-        return self.call_stream(req, None)
+    def call(self, req: dict, dedicated: bool = False) -> dict:
+        return self.call_stream(req, None, dedicated=dedicated)
 
     def call_stream(self, req: dict,
-                    sink: Optional[Callable[[bytes], None]]) -> dict:
+                    sink: Optional[Callable[[bytes], None]],
+                    dedicated: bool = False) -> dict:
+        # ``dedicated`` is accepted for interface parity with
+        # SocketTransport; in-process dispatch has no connection to pool
         req = msgpack.unpackb(msgpack.packb(req, use_bin_type=True),
                               raw=False, strict_map_key=False)
         try:

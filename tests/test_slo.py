@@ -398,6 +398,47 @@ class TestFaaSConcurrencyAndDeadlines:
         assert acct.slo_invocations == total
         assert acct.total_s == pytest.approx(acct.latencies.total_s)
 
+    def test_concurrent_mixed_tenant_accounting_exact(self, tmp_path):
+        """Many threads, mixed tenants and deadlines: per-container AND
+        per-tenant SLO accounting must both stay exact (DESIGN.md §12 —
+        the tenant ledger shares no lock with the container ledger)."""
+        from repro.core import RequestContext
+        platform = self._platform(tmp_path)
+        platform.deploy("f", lambda ctx, p: p)
+        profiles = [("alice", 10.0), ("bob", 5.0), ("carol", None)]
+        n_threads, per_thread = 9, 40
+        errs = []
+
+        def worker(i):
+            tenant, deadline = profiles[i % len(profiles)]
+            ctx = RequestContext(tenant=tenant, deadline_s=deadline)
+            try:
+                for _ in range(per_thread):
+                    platform.invoke("f", 1, ctx=ctx)
+            except Exception as e:  # noqa: BLE001
+                errs.append(e)
+
+        threads = [threading.Thread(target=worker, args=(i,))
+                   for i in range(n_threads)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert not errs
+        total = n_threads * per_thread
+        acct = platform.containers["f"].acct
+        assert acct.invocations == total
+        # only deadline-carrying requests are SLO-scored: carol's are not
+        per_tenant = total // len(profiles)
+        assert acct.slo_invocations == 2 * per_tenant
+        for tenant, deadline in profiles:
+            ta = platform.tenant_acct[tenant]
+            assert ta.invocations == per_tenant
+            assert ta.latencies.count == per_tenant
+            assert ta.slo_invocations == \
+                (per_tenant if deadline is not None else 0)
+            assert ta.total_s == pytest.approx(ta.latencies.total_s)
+
     def test_router_dispatch_counts_survive_races(self, tmp_path):
         nodes = []
         for i in range(3):

@@ -1,0 +1,336 @@
+"""Multi-tenant isolation (core.tenant + the RequestContext plumbing).
+
+Covers the DESIGN.md §12 stack: context validation at the single deadline
+boundary, wire round-trips, per-tenant residency accounting via cache
+listeners, fair shares and eviction weights, admission verdicts, the
+MRM's quota/deadline staging degrades, the FaaS invoke path (per-tenant
+SLO accounting, AdmissionError), and the context crossing the shm_ipc
+process boundary.
+"""
+import math
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import (AdmissionError, DiskStore, FaaSPlatform, MRM,
+                        ModelKey, RequestContext, TenantQuota,
+                        TenantRegistry)
+from repro.core.tenant import DEFAULT_TENANT
+
+MB = 1 << 20
+
+
+def _tensors(nbytes=1 * MB, n=2, seed=0):
+    rng = np.random.default_rng(seed)
+    per = nbytes // n // 4
+    return {f"w{i}": rng.standard_normal(per).astype(np.float32)
+            for i in range(n)}
+
+
+# ------------------------------------------------------- RequestContext
+class TestRequestContext:
+    def test_defaults_are_anonymous_critical(self):
+        ctx = RequestContext()
+        assert ctx.tenant == DEFAULT_TENANT
+        assert ctx.slo_class == "critical"
+        assert ctx.deadline_s is None
+        assert ctx.priority == 0
+
+    def test_deadline_validated_once_at_the_boundary(self):
+        assert RequestContext(deadline_s=0.5).deadline_s == 0.5
+        assert RequestContext(deadline_s=1).deadline_s == 1.0  # int -> float
+        for bad in (0, -1.0, float("inf"), float("nan")):
+            with pytest.raises(ValueError):
+                RequestContext(deadline_s=bad)
+
+    def test_tenant_and_class_validated(self):
+        with pytest.raises(ValueError):
+            RequestContext(tenant="")
+        with pytest.raises(ValueError):
+            RequestContext(slo_class="interactive")
+
+    def test_frozen(self):
+        ctx = RequestContext()
+        with pytest.raises(Exception):
+            ctx.tenant = "other"
+
+    def test_coerce_bridges_legacy_deadline(self):
+        assert RequestContext.coerce() is None
+        assert RequestContext.coerce(None, None) is None
+        wrapped = RequestContext.coerce(deadline_s=2.0)
+        assert wrapped.tenant == DEFAULT_TENANT
+        assert wrapped.deadline_s == 2.0
+        explicit = RequestContext(tenant="a", deadline_s=9.0)
+        # an explicit context wins over a stray legacy deadline
+        assert RequestContext.coerce(explicit, 1.0) is explicit
+        with pytest.raises(TypeError):
+            RequestContext.coerce({"tenant": "a"})
+        with pytest.raises(ValueError):
+            RequestContext.coerce(deadline_s=-3)
+
+    def test_wire_roundtrip(self):
+        ctx = RequestContext(tenant="t1", slo_class="batch",
+                             deadline_s=0.25, priority=3)
+        assert RequestContext.from_wire(ctx.to_wire()) == ctx
+        assert RequestContext.from_wire(None) is None
+        # no-deadline contexts omit the key entirely (msgpack-lean)
+        assert "deadline_s" not in RequestContext(tenant="t").to_wire()
+        # unknown keys from a newer peer are ignored
+        got = RequestContext.from_wire({"tenant": "t2", "shiny": True})
+        assert got.tenant == "t2" and got.deadline_s is None
+
+    def test_admission_error_carries_verdict(self):
+        ctx = RequestContext(tenant="t", slo_class="batch")
+        err = AdmissionError("shed", ctx, "tiers under pressure")
+        assert err.action == "shed"
+        assert err.ctx is ctx
+        assert "t" in str(err)
+
+
+# ------------------------------------------------------- TenantRegistry
+class TestTenantRegistry:
+    @pytest.fixture
+    def disk(self, tmp_path):
+        d = DiskStore(str(tmp_path / "d"))
+        for i in range(8):
+            d.put(ModelKey("jax", f"m{i}"), _tensors(seed=i))
+        return d
+
+    def test_attribution_and_residency_accounting(self, disk):
+        mrm = MRM(disk, device_capacity=16 * MB, host_capacity=32 * MB)
+        reg = TenantRegistry().attach(mrm)
+        assert mrm.tenants is reg
+        a = RequestContext(tenant="alice")
+        h = mrm.open(ModelKey("jax", "m0"), ctx=a)
+        assert reg.tenant_of(ModelKey("jax", "m0")) == "alice"
+        assert reg.usage_bytes("alice", "device") == h.nbytes
+        assert reg.usage_bytes("alice", "host") == h.nbytes  # cold chain
+        mrm.close(h)
+        # eviction releases the bytes back
+        mrm.device.remove(ModelKey("jax", "m0"))
+        assert reg.usage_bytes("alice", "device") == 0
+        mrm.shutdown()
+
+    def test_unattributed_bytes_charge_the_default_tenant(self, disk):
+        mrm = MRM(disk, device_capacity=16 * MB, host_capacity=32 * MB)
+        reg = TenantRegistry().attach(mrm)
+        h = mrm.open(ModelKey("jax", "m1"))  # no ctx: legacy caller
+        assert reg.usage_bytes(DEFAULT_TENANT, "device") == h.nbytes
+        mrm.close(h)
+        mrm.shutdown()
+
+    def test_attach_backfills_resident_entries(self, disk):
+        mrm = MRM(disk, device_capacity=16 * MB, host_capacity=32 * MB)
+        h = mrm.open(ModelKey("jax", "m2"))  # resident before attach
+        reg = TenantRegistry().attach(mrm)
+        assert reg.usage_bytes(DEFAULT_TENANT, "device") == h.nbytes
+        mrm.close(h)
+        mrm.shutdown()
+
+    def test_fair_bytes_quota_and_share_split(self):
+        reg = TenantRegistry()
+        reg._capacity["device"] = 100
+        reg.set_quota("capped", TenantQuota(device_bytes=10))
+        reg.set_quota("big", TenantQuota(share=3.0))
+        reg.set_quota("small", TenantQuota(share=1.0))
+        assert reg.fair_bytes("capped", "device") == 10.0
+        # share split runs over every known tenant (3 + 1 + capped's 1)
+        assert reg.fair_bytes("big", "device") == pytest.approx(60.0)
+        assert reg.fair_bytes("small", "device") == pytest.approx(20.0)
+
+    def test_overage_and_eviction_weight(self):
+        reg = TenantRegistry()
+        reg._capacity["device"] = 100
+        reg.set_quota("t", TenantQuota(device_bytes=50))
+        reg.note_open("k", "t")
+        reg._usage[("device", "t")] = 100  # 2x its share
+        assert reg.overage("t", "device") == pytest.approx(1.0)
+        assert reg.eviction_weight("k", "device") == pytest.approx(
+            1.0 + reg.overage_weight_k)
+        # an in-share tenant's bytes keep weight 1 (never penalized)
+        reg.note_open("k2", "other")
+        assert reg.eviction_weight("k2", "device") == 1.0
+
+    def test_would_exceed(self):
+        reg = TenantRegistry()
+        reg.set_quota("t", TenantQuota(device_bytes=100))
+        reg._usage[("device", "t")] = 60
+        assert not reg.would_exceed("t", "device", 40)
+        assert reg.would_exceed("t", "device", 41)
+        assert not reg.would_exceed("uncapped", "device", 1 << 40)
+
+    def test_admission_verdicts(self):
+        reg = TenantRegistry()
+        reg._capacity["device"] = 100
+        crit = RequestContext(tenant="a", slo_class="critical")
+        batch = RequestContext(tenant="b", slo_class="batch")
+        # critical admits even at full pressure; None = legacy traffic
+        assert reg.admit(crit, 1.0, 1.0) == "admit"
+        assert reg.admit(None, 1.0, 1.0) == "admit"
+        # batch admits while either tier has headroom
+        assert reg.admit(batch, 1.0, 0.5) == "admit"
+        assert reg.admit(batch, 0.5, 1.0) == "admit"
+        # both tiers pressured: queue while in-share...
+        assert reg.admit(batch, 1.0, 1.0) == "queue"
+        # ...shed once the tenant is over its fair share
+        reg.set_quota("b", TenantQuota(device_bytes=10))
+        reg._usage[("device", "b")] = 30
+        assert reg.admit(batch, 1.0, 1.0) == "shed"
+        st = reg.stats()
+        assert st["a"]["admitted"] == 1
+        assert st["b"]["admitted"] == 2
+        assert st["b"]["queued"] == 1
+        assert st["b"]["shed"] == 1
+
+    def test_attribution_map_is_bounded(self, monkeypatch):
+        import repro.core.tenant as tenant_mod
+        monkeypatch.setattr(tenant_mod, "_KEY_TENANT_CAP", 4)
+        reg = TenantRegistry()
+        for i in range(8):
+            reg.note_open(f"k{i}", "t")
+        assert len(reg._key_tenant) <= 5
+        assert reg.tenant_of("k0") == DEFAULT_TENANT  # pruned -> default
+        assert reg.tenant_of("k7") == "t"
+
+
+# --------------------------------------------------- MRM staging degrades
+class TestMRMAdmission:
+    @pytest.fixture
+    def disk(self, tmp_path):
+        d = DiskStore(str(tmp_path / "d"))
+        for i in range(4):
+            d.put(ModelKey("jax", f"m{i}"), _tensors(seed=i))
+        return d
+
+    def test_quota_exhaustion_degrades_to_host(self, disk):
+        mrm = MRM(disk, device_capacity=16 * MB, host_capacity=32 * MB)
+        reg = TenantRegistry().attach(mrm)
+        ctx = RequestContext(tenant="t")
+        h0 = mrm.open(ModelKey("jax", "m0"), ctx=ctx)
+        reg.set_quota("t", TenantQuota(device_bytes=h0.nbytes))
+        h1 = mrm.open(ModelKey("jax", "m1"), ctx=ctx)  # would break quota
+        assert mrm.device.peek(ModelKey("jax", "m1")) is None
+        assert mrm.host.peek(ModelKey("jax", "m1")) is not None
+        assert mrm.metrics["quota_degraded"] == 1
+        assert reg.stats()["t"]["degraded"] == 1
+        mrm.close(h0)
+        mrm.close(h1)
+        mrm.shutdown()
+
+    def test_blown_deadline_skips_device_staging(self, disk):
+        mrm = MRM(disk, device_capacity=16 * MB, host_capacity=32 * MB)
+        TenantRegistry().attach(mrm)
+        # a cold load can never be device-ready in 1ns: don't burn H2D on it
+        ctx = RequestContext(tenant="t", deadline_s=1e-9)
+        h = mrm.open(ModelKey("jax", "m2"), ctx=ctx)
+        assert mrm.device.peek(ModelKey("jax", "m2")) is None
+        assert mrm.metrics["admission_degraded"] == 1
+        mrm.close(h)
+        mrm.shutdown()
+
+    def test_without_registry_context_is_inert(self, disk):
+        mrm = MRM(disk, device_capacity=16 * MB, host_capacity=32 * MB)
+        ctx = RequestContext(tenant="t", deadline_s=1e-9)
+        h = mrm.open(ModelKey("jax", "m3"), ctx=ctx)  # no degrade, no error
+        assert mrm.device.peek(ModelKey("jax", "m3")) is not None
+        assert mrm.metrics["admission_degraded"] == 0
+        mrm.close(h)
+        mrm.shutdown()
+
+    def test_note_deadline_rejects_invalid_via_boundary(self, disk):
+        mrm = MRM(disk, policy="slo")
+        with pytest.raises(ValueError):
+            mrm.note_deadline(-1.0)
+        mrm.note_deadline(None)  # still a no-op
+        mrm.shutdown()
+
+
+# ------------------------------------------------- FaaS invoke + tenancy
+class TestFaaSTenancy:
+    def _platform(self, tmp_path, tenants=None, n_models=2):
+        disk = DiskStore(str(tmp_path / "disk"))
+        for i in range(n_models):
+            disk.put(ModelKey("jax", f"m{i}"), _tensors(seed=i))
+        mrm = MRM(disk, device_capacity=32 * MB, host_capacity=64 * MB)
+        return FaaSPlatform(mrm, tenants=tenants)
+
+    def test_context_visible_to_function_and_attributes_loads(self, tmp_path):
+        reg = TenantRegistry()
+        platform = self._platform(tmp_path, tenants=reg)
+        assert platform.mrm.tenants is reg  # auto-attached
+        seen = {}
+
+        def fn(c, p):
+            seen["ctx"] = c.current_ctx
+            m = c.load_model("jax", "m0")  # inherits the invoke's context
+            c.unload_model(m)
+            return p
+
+        platform.deploy("f", fn, prewarm=False)
+        ctx = RequestContext(tenant="alice", deadline_s=5.0)
+        assert platform.invoke("f", 42, ctx=ctx) == 42
+        assert seen["ctx"] is ctx
+        assert platform.containers["f"].current_ctx is None  # restored
+        assert reg.tenant_of(ModelKey("jax", "m0")) == "alice"
+        assert reg.usage_bytes("alice", "device") > 0
+        acct = platform.tenant_acct["alice"]
+        assert acct.invocations == 1 and acct.slo_invocations == 1
+
+    def test_admission_error_raised_before_the_function_runs(self, tmp_path):
+        reg = TenantRegistry()
+        platform = self._platform(tmp_path, tenants=reg)
+        ran = []
+        platform.deploy("f", lambda c, p: ran.append(p), prewarm=False)
+        platform._tier_frac = lambda cache: 1.0  # both tiers saturated
+        batch = RequestContext(tenant="b", slo_class="batch")
+        with pytest.raises(AdmissionError) as ei:
+            platform.invoke("f", 1, ctx=batch)
+        assert ei.value.action == "queue"
+        reg.set_quota("b", TenantQuota(device_bytes=1))
+        reg._usage[("device", "b")] = 2
+        with pytest.raises(AdmissionError) as ei:
+            platform.invoke("f", 1, ctx=batch)
+        assert ei.value.action == "shed"
+        assert not ran  # refused work never executed
+        # critical work still admits at full pressure
+        crit = RequestContext(tenant="a", slo_class="critical")
+        platform.invoke("f", 2, ctx=crit)
+        assert ran == [2]
+
+    def test_legacy_deadline_keyword_still_works(self, tmp_path):
+        platform = self._platform(tmp_path)
+        platform.deploy("f", lambda c, p: p, prewarm=False)
+        assert platform.invoke("f", 1, deadline_s=10.0) == 1
+        acct = platform.tenant_acct[DEFAULT_TENANT]
+        assert acct.slo_invocations == 1
+        with pytest.raises(ValueError):
+            platform.invoke("f", 1, deadline_s=0.0)  # boundary validation
+
+
+# -------------------------------------------- context across the process
+class TestContextOverShmIpc:
+    def test_wire_context_attributes_the_daemon_side_open(self, tmp_path):
+        from repro.core.shm_ipc import MRMServer, RemoteTrimsClient
+        disk = DiskStore(str(tmp_path / "disk"))
+        disk.put(ModelKey("jax", "shared"), _tensors(seed=7))
+        mrm = MRM(disk, device_capacity=64 * MB, host_capacity=256 * MB,
+                  use_shm=True)
+        reg = TenantRegistry().attach(mrm)
+        srv = MRMServer(mrm, str(tmp_path / "mrm.sock"))
+        try:
+            client = RemoteTrimsClient(srv.sock_path)
+            ctx = RequestContext(tenant="remote-tenant", deadline_s=30.0)
+            h = client.open("jax", "shared", ctx=ctx)
+            assert reg.tenant_of(ModelKey("jax", "shared")) == "remote-tenant"
+            assert reg.usage_bytes("remote-tenant", "host") > 0
+            client.close(h)
+            # a context-free client (an old binary) still works unchanged
+            h2 = client.open("jax", "shared")
+            client.close(h2)
+            client.disconnect()
+        finally:
+            srv.stop()
+            for e in list(mrm.host.entries.values()):
+                if e.payload is not None:
+                    e.payload.release()
