@@ -148,6 +148,20 @@ def main() -> None:
                 f"displaced_mib={by_cell['noisy_neighbor']['svc_displaced_bytes'] / 2 ** 20:.1f};"
                 f"batch_refused={by_cell['admission_pressure']['batch_queued'] + by_cell['admission_pressure']['batch_shed']}"))
 
+    print("== placement: predictive planner vs reactive baseline ==",
+          flush=True)
+    from benchmarks import bench_placement
+    rows_p = bench_placement.run(smoke=not args.full, verbose=True)
+    by_cell = {(r["workload"], r["arm"]): r for r in rows_p}
+    d_base, d_plan = by_cell[("diurnal", "reactive")], by_cell[("diurnal", "planner")]
+    b_base, b_plan = by_cell[("bursty", "reactive")], by_cell[("bursty", "planner")]
+    out.append(("placement_planner", 1e6 * d_plan["p99_steady_s"],
+                f"diurnal_cold={d_base['cold_rate']:.3f}->{d_plan['cold_rate']:.3f};"
+                f"bursty_cold={b_base['cold_rate']:.3f}->{b_plan['cold_rate']:.3f};"
+                f"p99_steady_vs_reactive={d_base['p99_steady_s'] / max(d_plan['p99_steady_s'], 1e-12):.2f}x;"
+                f"prefetches={d_plan['planner_prefetches']};"
+                f"shard_copies={d_plan['planner_shard_copies']}"))
+
     print("== compression: codec x ratio x link bw ==", flush=True)
     from benchmarks import bench_compression
     rows_z = bench_compression.run(smoke=not args.full, verbose=True)

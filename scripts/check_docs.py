@@ -83,6 +83,19 @@ REQUIRED_CONTENT = [
     ("README.md", "bench_fleet"),
     ("README.md", "bench_tenant"),
     ("README.md", "RequestContext"),
+    ("DESIGN.md", "Predictive fleet-wide placement"),
+    ("DESIGN.md", "PlacementPlanner"),
+    ("DESIGN.md", "PeriodicPattern"),
+    ("DESIGN.md", "prefetch_suppressed"),
+    (os.path.join("docs", "API.md"), "PlacementPlanner"),
+    (os.path.join("docs", "API.md"), "PlannerConfig"),
+    (os.path.join("docs", "API.md"), "PlacementAction"),
+    (os.path.join("docs", "API.md"), "planner_ctx"),
+    (os.path.join("docs", "API.md"), "drop_model"),
+    (os.path.join("docs", "API.md"), "evicted_streams"),
+    (os.path.join("docs", "API.md"), "p99_steady_s"),
+    ("README.md", "bench_placement"),
+    ("README.md", "placement planner"),
 ]
 
 LINK_RE = re.compile(r"(?<!\!)\[[^\]]+\]\(([^)\s]+)\)")

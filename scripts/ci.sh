@@ -53,6 +53,12 @@ if [[ "${1:-}" == "--fast" ]]; then
     # and a noisy-neighbor flood must not displace more than its quota's
     # share of another tenant's hot set (asserted inside the benchmark)
     python -m benchmarks.bench_tenant --smoke
+    # predictive placement (DESIGN.md §13): the planner must beat the
+    # reactive baseline on cold-start rate AND steady-state p99 on the
+    # diurnal and bursty traces, and never lose on the uniform control
+    # trace (asserted inside the benchmark; the full-profile margins run
+    # in the full bench)
+    python -m benchmarks.bench_placement --smoke
 else
     # coverage gate for the paper-core package (full mode only): enforced
     # whenever pytest-cov is importable; the floor tracks the suite, so
@@ -64,7 +70,7 @@ else
         ARGS+=(--cov=repro.core --cov=repro.core.layerplan
                --cov=repro.core.directory --cov=repro.core.fleetsim
                --cov=repro.core.transport --cov=repro.core.noded
-               --cov=repro.core.tenant
+               --cov=repro.core.tenant --cov=repro.core.placement
                --cov-fail-under=70)
     else
         echo "ci.sh: pytest-cov not installed - skipping the coverage gate"

@@ -35,6 +35,10 @@ from repro.core.mrm import (  # noqa: F401
 from repro.core.pipeline import (  # noqa: F401
     PipelineReport, plan_chunks, run_pipeline,
 )
+from repro.core.placement import (  # noqa: F401
+    PLANNER_TENANT, ArrivalHistory, PeriodicPattern, PlacementAction,
+    PlacementPlanner, PlannerConfig, planner_ctx,
+)
 from repro.core.sharing import get_constants, plan_granularity, rho  # noqa: F401
 from repro.core.slo import (  # noqa: F401
     NextUsePredictor, ReloadCostEstimator, SLOState,

@@ -209,6 +209,16 @@ class ClusterDirectory:
                           in self._shards.get(key, {}).items()
                           if node_name in holders and holders[node_name])
 
+    def shard_keys(self) -> List[ModelKey]:
+        """Keys with at least one live shard placement — the planner's
+        rebalance scan walks this instead of guessing the catalogue
+        (DESIGN.md §13)."""
+        with self._lock:
+            return sorted(key for key, table in self._shards.items()
+                          if any(holders.get(n)
+                                 for holders in table.values()
+                                 for n in holders))
+
     def stats(self) -> dict:
         with self._lock:
             return {"models": len(self._where), "nodes": len(self._nodes),
@@ -1112,19 +1122,35 @@ class Cluster:
         shard cache with a published placement. This is how a model larger
         than any single node's device tier becomes cluster-resident
         without any node holding it whole (§8). Returns
-        ``{node_name: [shard indices]}``."""
+        ``{node_name: [shard indices]}``.
+
+        Unknown ``node_names`` fail up front, before any shard moves; a
+        failure mid-scatter (fetch or store) rolls back the shards that
+        already landed — local copy unlinked, placement withdrawn — so
+        the directory never advertises a half-scattered model."""
         key = ModelKey(*key)
         if self.objectstore is None:
             raise RuntimeError("scatter needs a cluster object store")
         names = list(node_names or self.nodes)
         if not names:
             raise RuntimeError("scatter needs at least one node")
+        unknown = sorted(set(names) - set(self.nodes))
+        if unknown:
+            raise KeyError(f"scatter: unknown node(s) {unknown}; "
+                           f"cluster has {sorted(self.nodes)}")
         out: Dict[str, List[int]] = {n: [] for n in names}
-        for s in self.objectstore.shard_table(key):
-            name = names[s["index"] % len(names)]
-            _, data = self.objectstore.fetch_shard(key, s["index"])
-            self.nodes[name].store_shard(key, s["index"], data)
-            out[name].append(s["index"])
+        placed: List[Tuple[str, int]] = []
+        try:
+            for s in self.objectstore.shard_table(key):
+                name = names[s["index"] % len(names)]
+                _, data = self.objectstore.fetch_shard(key, s["index"])
+                self.nodes[name].store_shard(key, s["index"], data)
+                placed.append((name, s["index"]))
+                out[name].append(s["index"])
+        except BaseException:
+            for name, idx in placed:
+                self.nodes[name]._forget_local_shard(key, idx)
+            raise
         return out
 
     def stats(self) -> dict:

@@ -70,6 +70,7 @@ class DirectoryProtocol(Protocol):
     def shard_holders(self, key: ModelKey, index: int,
                       exclude: Optional[str] = None) -> List[Tuple[str, Tier]]: ...
     def shards_on(self, key: ModelKey, node_name: str) -> List[int]: ...
+    def shard_keys(self) -> List[ModelKey]: ...
     def stats(self) -> dict: ...
 
 
@@ -412,6 +413,19 @@ class ShardedClusterDirectory:
             return sorted(idx for idx, holders
                           in v.shards.get(key, {}).items()
                           if node_name in holders and holders[node_name][0])
+
+    def shard_keys(self) -> List[ModelKey]:
+        """Keys with at least one live shard placement, across every
+        directory shard — the placement planner's rebalance scan
+        (DESIGN.md §13). One op charged per shard view walked."""
+        out = set()
+        for v in self._views:
+            with v.lock:
+                v.ops += 1
+                out.update(key for key, table in v.shards.items()
+                           if any(rec[0] for holders in table.values()
+                                  for rec in holders.values()))
+        return sorted(out)
 
     def stats(self) -> dict:
         models: Set[ModelKey] = set()

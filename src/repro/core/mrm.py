@@ -197,6 +197,7 @@ class LoadFuture:
         self.state = PENDING
         self.stage = "queued"
         self.coalesced = False
+        self.suppressed = False  # batch prefetch refused under pressure
         self.timings = OpenTimings()
         self._t_start = time.perf_counter()
         self._retries = 0
@@ -424,6 +425,9 @@ class MRM:
             # host tier because the deadline was already infeasible, or
             # because the tenant's device quota was exhausted
             "admission_degraded": 0, "quota_degraded": 0,
+            # batch-class prefetches refused while the tiers are under
+            # pressure (DESIGN.md §13: planner traffic yields to demand)
+            "prefetch_suppressed": 0,
         }
         # eviction-attribution state: device victims awaiting a possible
         # return (key -> (t_evict, predicted_next_use_s)), keys whose
@@ -643,6 +647,25 @@ class MRM:
         if ctx is not None and self.tenants is not None:
             self.tenants.note_open(key, ctx.tenant)
 
+    def _tier_frac(self, cache) -> float:
+        with cache.lock:
+            return cache.used / cache.capacity if cache.capacity else 1.0
+
+    def _suppress_prefetch(self, key: ModelKey,
+                           ctx: Optional[RequestContext],
+                           want_handle: bool) -> bool:
+        """Batch-class prefetch admission (DESIGN.md §13): a speculative
+        warm-up carrying a batch RequestContext is refused outright while
+        either tier is under admission pressure, so planner pre-positioning
+        can never displace or queue behind a critical demand open. Handle
+        -carrying opens and context-free legacy prefetches are untouched."""
+        if (want_handle or ctx is None or self.tenants is None
+                or ctx.slo_class != "batch"):
+            return False
+        verdict = self.tenants.admit(ctx, self._tier_frac(self.device),
+                                     self._tier_frac(self.host))
+        return verdict != "admit"
+
     # ------------------------------------------------------------------ API
     def open_async(self, key: ModelKey, activation_bytes: int = 0,
                    granularity: str = "model", tier: str = "device",
@@ -663,6 +686,15 @@ class MRM:
         """
         key = ModelKey(*key)
         self._note_ctx(key, ctx)
+        if self._suppress_prefetch(key, ctx, want_handle):
+            fut = LoadFuture(key, tier, want_handle,
+                             activation_bytes, granularity, ctx=ctx)
+            with self._lock:
+                self.metrics["prefetches"] += 1
+                self.metrics["prefetch_suppressed"] += 1
+            fut.suppressed = True
+            fut._finish(None)
+            return fut
         if ctx is not None:
             tier = self._admit_tier(key, ctx, tier)
         fut = LoadFuture(key, tier, want_handle,
@@ -758,10 +790,48 @@ class MRM:
                         e.payload.release()
                     e.payload = None
 
+    def drop_model(self, key: ModelKey, from_disk: bool = False) -> dict:
+        """Deregister ``key`` from this MRM: evict idle tier copies
+        (refcount 0, unpinned), optionally delete the local DISK file, and
+        always ``forget()`` the key's arrival history — the predictor's
+        slots are bounded, so a deregistration that skips the forget leaks
+        one until capacity eviction reclaims it, possibly at a live
+        stream's expense (DESIGN.md §7/§13). In-use copies are left alone
+        and reported via ``"busy"``; the CLOUD tier is never touched."""
+        key = ModelKey(*key)
+        out = {"device": False, "host": False, "disk": False, "busy": False}
+        for tier_name, cache in (("device", self.device), ("host", self.host)):
+            payload = None
+            with cache.lock:
+                e = cache.peek(key)
+                if e is None:
+                    continue
+                if e.refcount > 0 or e.pinned:
+                    out["busy"] = True
+                    continue
+                # a drop is not a demotion: null the payload so the host
+                # write-back listener does not republish the copy to CLOUD
+                payload = e.payload
+                e.payload = None
+                cache.remove(key)
+                out[tier_name] = True
+            if tier_name == "host" and payload is not None:
+                payload.release()
+        if from_disk and not out["busy"] and self.disk.contains(key):
+            self.disk.delete(key)
+            out["disk"] = True
+        if self.slo is not None:
+            self.slo.predictor.forget(key)
+        return out
+
     def stats(self) -> dict:
         with self._lock:
+            slo_stats = (self.slo.predictor.stats()
+                         if self.slo is not None else {})
             return {"device": self.device.stats(), "host": self.host.stats(),
-                    **self.tiers.stats(), **self.metrics}
+                    **self.tiers.stats(), **self.metrics,
+                    "predictor_evicted_streams":
+                        slo_stats.get("evicted_streams", 0)}
 
     # ------------------------------------------------- future orchestration
     def _submit(self, fut: LoadFuture, inline: bool = False):

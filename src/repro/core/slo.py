@@ -72,10 +72,28 @@ class NextUsePredictor:
         self.alpha = alpha
         self.default_gap_s = default_gap_s
         self.max_keys = max_keys
+        self.evicted_streams = 0  # cap-evictions of multi-arrival streams
         self._stats: Dict[Hashable, _KeyStats] = {}
         self._lock = threading.Lock()
 
     # -- feeding ------------------------------------------------------------
+    def _evict_for_capacity_locked(self) -> None:
+        """Make room for a new key: prefer the stalest *single-arrival*
+        record (a scan key that never came back) so a flood of one-shot
+        keys cannot flush an established stream's gap history; only when
+        every slot holds a real stream does the stalest stream go, and
+        ``evicted_streams`` counts those losses."""
+        stale = None
+        stale_t = math.inf
+        for k, rec in self._stats.items():
+            if rec.arrivals == 1 and rec.last_arrival < stale_t:
+                stale, stale_t = k, rec.last_arrival
+        if stale is None:
+            stale = min(self._stats,
+                        key=lambda k: self._stats[k].last_arrival)
+            self.evicted_streams += 1
+        del self._stats[stale]
+
     def record(self, key: Hashable, now: Optional[float] = None) -> None:
         """One arrival of ``key`` (an MRM open or prefetch)."""
         now = self.clock() if now is None else now
@@ -83,9 +101,7 @@ class NextUsePredictor:
             rec = self._stats.get(key)
             if rec is None:
                 if len(self._stats) >= self.max_keys:
-                    # drop the stalest stream, not the newest arrival
-                    stale = min(self._stats, key=lambda k: self._stats[k].last_arrival)
-                    del self._stats[stale]
+                    self._evict_for_capacity_locked()
                 self._stats[key] = _KeyStats(last_arrival=now)
                 return
             gap = max(1e-9, now - rec.last_arrival)
@@ -149,8 +165,17 @@ class NextUsePredictor:
             return decay * (1.0 - math.exp(-max(0.0, horizon_s) / gap))
 
     def forget(self, key: Hashable) -> None:
+        """Drop ``key``'s arrival history (model deregistered/removed).
+        Slots are bounded (``max_keys``); deregistration paths that skip
+        this leak a slot until capacity eviction reclaims it — possibly
+        at a live stream's expense."""
         with self._lock:
             self._stats.pop(key, None)
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {"keys": len(self._stats), "max_keys": self.max_keys,
+                    "evicted_streams": self.evicted_streams}
 
     def __len__(self) -> int:
         with self._lock:

@@ -1,0 +1,389 @@
+"""Predictive fleet-wide placement (DESIGN.md §13) + the PR's
+correctness regressions.
+
+Covers the periodic/diurnal detector on seeded synthetic traces, the
+planner's action generation (pre-position before a predicted burst,
+burst dedupe, gather-driven replication, membership rebalance, silence
+on uniform traffic), ``apply`` against a real mini-cluster with
+batch-class admission, and the two regressions: ``Cluster.scatter``
+validates node names up front / rolls back on mid-scatter failure, and
+``NextUsePredictor`` cap-eviction prefers one-shot records over live
+streams (``drop_model`` wires ``forget``).
+"""
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (Cluster, DiskStore, HardwareModel, MRM, ModelKey,
+                        NextUsePredictor, ObjectStore, PLANNER_TENANT,
+                        PeriodicPattern, PlacementPlanner, PlannerConfig,
+                        RequestContext, TenantRegistry, planner_ctx)
+from repro.core.placement import PlacementAction
+
+MB = 1 << 20
+SHARD = 256 << 10
+
+
+def _tensors(nbytes=2 * MB, n=8, seed=0):
+    rng = np.random.default_rng(seed)
+    per = nbytes // n // 4
+    return {f"w{i}": rng.standard_normal(per).astype(np.float32)
+            for i in range(n)}
+
+
+def _mrm(disk, dev=64 * MB, host=256 * MB, **kw):
+    return MRM(disk, device_capacity=dev, host_capacity=host,
+               hw=kw.pop("hw", HardwareModel()), **kw)
+
+
+@pytest.fixture
+def objstore(tmp_path):
+    return ObjectStore(str(tmp_path / "cloud"), shard_bytes=SHARD)
+
+
+def _cluster(tmp_path, objstore, n=3, populate=(), **mrm_kw):
+    for key, seed in populate:
+        objstore.put(key, _tensors(seed=seed))
+    cluster = Cluster(objectstore=objstore)
+    for i in range(n):
+        cluster.add_node(f"node{i}",
+                         _mrm(DiskStore(str(tmp_path / f"disk{i}")), **mrm_kw))
+    return cluster
+
+
+CFG = PlannerConfig(bin_s=1.0, min_bursts=3, min_arrivals=4, lead_s=1.0)
+
+
+def _feed_periodic(p, key, period=5.0, n=6, node="node0", t0=0.25):
+    """n bursts of one arrival each, exactly ``period`` apart."""
+    for i in range(n):
+        p.observe(key, node=node, now=t0 + i * period)
+
+
+# ---------------------------------------------------------------- detector
+class TestDetector:
+    def test_periodic_trace_detected(self):
+        p = PlacementPlanner(cfg=CFG)
+        key = ModelKey("jax", "m", "1")
+        _feed_periodic(p, key, period=5.0, n=6)
+        pat = p.pattern(key)
+        assert isinstance(pat, PeriodicPattern)
+        assert pat.period_s == pytest.approx(5.0, abs=CFG.bin_s)
+        assert pat.bursts == 6 and pat.cv <= CFG.max_period_cv
+        # the next predicted start is one period after the last burst
+        nxt = pat.next_start_s(now=25.5)
+        assert nxt == pytest.approx(25.0 + pat.period_s, abs=CFG.bin_s)
+
+    def test_sparse_duty_window_reads_as_one_burst(self):
+        """Arrivals inside a duty window leave empty bins; merge_gap_bins
+        welds them into one run instead of shattering the period."""
+        p = PlacementPlanner(cfg=CFG)
+        key = ModelKey("jax", "m", "1")
+        for i in range(4):  # window = bins [0,2] with bin 1 empty
+            base = i * 10.0
+            p.observe(key, now=base + 0.1)
+            p.observe(key, now=base + 2.1)
+        pat = p.pattern(key)
+        assert pat is not None
+        assert pat.period_s == pytest.approx(10.0, abs=CFG.bin_s)
+
+    def test_background_traffic_does_not_weld_bursts(self):
+        """A thin uniform background under a strong periodic spike must
+        not merge everything into one run (active_frac threshold)."""
+        p = PlacementPlanner(cfg=CFG)
+        key = ModelKey("jax", "m", "1")
+        for i in range(5):  # spikes: 8 arrivals at t = i*6
+            for _ in range(8):
+                p.observe(key, now=i * 6.0 + 0.1)
+        for t in range(30):  # background: 1 arrival every bin
+            p.observe(key, now=t + 0.5)
+        pat = p.pattern(key)
+        assert pat is not None
+        assert pat.period_s == pytest.approx(6.0, abs=CFG.bin_s)
+
+    def test_uniform_and_thin_traces_yield_no_pattern(self):
+        import random
+        p = PlacementPlanner(cfg=CFG)
+        uni, thin = ModelKey("jax", "u", "1"), ModelKey("jax", "t", "1")
+        rng = random.Random(7)
+        for _ in range(200):  # uniform: every bin active -> one giant run
+            p.observe(uni, now=rng.uniform(0.0, 30.0))
+        p.observe(thin, now=1.0)  # below min_arrivals
+        p.observe(thin, now=6.0)
+        assert p.pattern(uni) is None
+        assert p.pattern(thin) is None
+
+    def test_irregular_gaps_fail_cv_gate(self):
+        p = PlacementPlanner(cfg=CFG)
+        key = ModelKey("jax", "m", "1")
+        for t in (0.5, 4.5, 14.5, 17.5, 30.5):  # gaps 4, 10, 3, 13
+            p.observe(key, now=t)
+        assert p.pattern(key) is None
+
+
+# ------------------------------------------------------------------- plan()
+class TestPlan:
+    def test_preposition_fires_inside_lead_window_once(self):
+        p = PlacementPlanner(cfg=CFG)
+        key = ModelKey("jax", "m", "1")
+        _feed_periodic(p, key, period=5.0, n=6, node="node1")  # last at 25.25
+        assert p.plan(now=26.0) == []           # burst at ~30 is > lead away
+        acts = p.plan(now=29.5)                  # inside the 1s lead window
+        assert [a.kind for a in acts] == ["preposition"]
+        assert acts[0].key == key and "node1" in acts[0].nodes
+        assert 29.5 < acts[0].at_s <= 30.5
+        assert p.plan(now=29.6) == []            # deduped: same burst
+        assert p.metrics["prepositions"] == 1
+
+    def test_next_cycle_reacts_again(self):
+        p = PlacementPlanner(cfg=CFG)
+        key = ModelKey("jax", "m", "1")
+        _feed_periodic(p, key, period=5.0, n=6)
+        assert len(p.plan(now=29.5)) == 1
+        assert len(p.plan(now=34.5)) == 1        # the following burst
+        assert p.metrics["prepositions"] == 2
+
+    def test_no_signal_no_action(self):
+        import random
+        p = PlacementPlanner(cfg=CFG)
+        rng = random.Random(3)
+        for _ in range(300):
+            p.observe(ModelKey("jax", f"m{rng.randrange(8)}", "1"),
+                      node=f"node{rng.randrange(4)}",
+                      now=rng.uniform(0.0, 30.0))
+        for t in (5.0, 15.0, 29.0):
+            assert p.plan(now=t) == []
+        assert p.metrics["prepositions"] == 0
+
+    def test_gather_origins_drive_replication(self):
+        p = PlacementPlanner(cfg=CFG)
+        key = ModelKey("jax", "m", "1")
+        _feed_periodic(p, key, period=5.0, n=6, node="node0")
+        for _ in range(CFG.replicate_min_gathers):
+            p.observe(key, node="node2", now=25.3, kind="gather")
+        acts = p.plan(now=29.5)
+        kinds = {a.kind: a for a in acts}
+        assert set(kinds) == {"replicate", "preposition"}
+        assert kinds["replicate"].nodes == ("node2",)
+        # the replicated node's gathers become local: no whole-model copy
+        assert "node2" not in kinds["preposition"].nodes
+
+    def test_membership_change_triggers_rebalance(self, tmp_path, objstore):
+        key = ModelKey("jax", "m", "1")
+        cluster = _cluster(tmp_path, objstore, n=3, populate=[(key, 0)])
+        cluster.scatter(key)
+        p = PlacementPlanner(directory=cluster.directory, cfg=CFG)
+        assert p.plan(now=0.0) == []             # first plan: snapshot only
+        cluster.directory.drop_node("node1")     # generation bump
+        acts = [a for a in p.plan(now=1.0) if a.kind == "rebalance"]
+        assert len(acts) == 1 and acts[0].key == key
+        assert set(acts[0].nodes) == {"node0", "node2"}
+        assert p.metrics["rebalances"] == 1
+        assert p.plan(now=2.0) == []             # stable generation: quiet
+
+
+# ------------------------------------------------------------------ apply()
+class TestApply:
+    def test_preposition_prefetches_host_tier(self, tmp_path, objstore):
+        key = ModelKey("jax", "m", "1")
+        cluster = _cluster(tmp_path, objstore, n=2, populate=[(key, 0)])
+        p = PlacementPlanner(cfg=CFG)
+        _feed_periodic(p, key, period=5.0, n=6, node="node1")
+        applied = p.apply(cluster, now=29.5)
+        assert [a.kind for a in applied] == ["preposition"]
+        node = cluster.node("node1")
+        deadline = time.time() + 30.0
+        while not (node.mrm.host.peek(key) is not None) and time.time() < deadline:
+            time.sleep(0.01)
+        assert (node.mrm.host.peek(key) is not None)       # warm, no handle taken
+        assert p.metrics["actions_applied"] == 1
+
+    def test_apply_carries_batch_class_context(self):
+        ctx = planner_ctx()
+        assert ctx.tenant == PLANNER_TENANT and ctx.slo_class == "batch"
+
+    def test_replicate_scatters_shards(self, tmp_path, objstore):
+        key = ModelKey("jax", "m", "1")
+        cluster = _cluster(tmp_path, objstore, n=3, populate=[(key, 0)])
+        p = PlacementPlanner(cfg=CFG)
+        _feed_periodic(p, key, period=5.0, n=6, node="node0")
+        for _ in range(CFG.replicate_min_gathers):
+            p.observe(key, node="node2", now=25.3, kind="gather")
+        acts = [a for a in p.plan(now=29.5) if a.kind == "replicate"]
+        p.apply(cluster, actions=acts)
+        held = cluster.node("node2").local_shards(key)
+        assert held, "replicate must land shard copies on the gather origin"
+
+    def test_failed_action_does_not_abort_the_rest(self, tmp_path, objstore):
+        k_bad = ModelKey("jax", "missing", "1")  # not in the object store
+        k_good = ModelKey("jax", "m", "1")
+        cluster = _cluster(tmp_path, objstore, n=2, populate=[(k_good, 0)])
+        p = PlacementPlanner(cfg=CFG)
+        acts = [PlacementAction("replicate", k, ("node0",), at_s=0.0)
+                for k in (k_bad, k_good)]
+        applied = p.apply(cluster, actions=acts)
+        assert [a.key for a in applied] == [k_good]
+        assert p.metrics["apply_errors"] == 1
+
+
+# ----------------------------------------------- batch prefetch admission
+class TestPlannerAdmission:
+    def _pressured_mrm(self, tmp_path, n_fill=4):
+        """Both shared tiers >= pressure_frac full of pinned-by-handle
+        models: the §12 admission gate reads them as saturated."""
+        disk = DiskStore(str(tmp_path / "disk"))
+        per = _tensors(nbytes=1 * MB, seed=9)
+        per_n = sum(a.nbytes for a in per.values())
+        cap = int(n_fill * per_n * 1.01)
+        mrm = _mrm(disk, dev=cap, host=cap)
+        TenantRegistry().attach(mrm)
+        handles = []
+        for i in range(n_fill):
+            k = ModelKey("jax", f"fill{i}", "1")
+            disk.put(k, _tensors(nbytes=1 * MB, seed=i))
+            handles.append(mrm.open(k))
+        return mrm, disk, handles
+
+    def test_batch_prefetch_suppressed_under_pressure(self, tmp_path):
+        mrm, disk, handles = self._pressured_mrm(tmp_path)
+        key = ModelKey("jax", "wanted", "1")
+        disk.put(key, _tensors(nbytes=1 * MB, seed=99))
+        fut = mrm.prefetch(key, tier="host", ctx=planner_ctx())
+        fut.result()
+        assert fut.suppressed
+        assert mrm.metrics["prefetch_suppressed"] == 1
+        assert mrm.host.peek(key) is None
+        for h in handles:
+            mrm.close(h)
+
+    def test_critical_open_unaffected_by_pressure(self, tmp_path):
+        mrm, disk, handles = self._pressured_mrm(tmp_path)
+        key = ModelKey("jax", "wanted", "1")
+        disk.put(key, _tensors(nbytes=1 * MB, seed=99))
+        for h in handles:  # release so the critical open can evict
+            mrm.close(h)
+        ctx = RequestContext(tenant="svc", slo_class="critical")
+        h = mrm.open(key, ctx=ctx)
+        assert np.asarray(h.weights["w0"]).nbytes > 0
+        assert mrm.metrics["prefetch_suppressed"] == 0
+        mrm.close(h)
+
+    def test_contextless_prefetch_untouched(self, tmp_path):
+        mrm, disk, handles = self._pressured_mrm(tmp_path)
+        key = ModelKey("jax", "wanted", "1")
+        disk.put(key, _tensors(nbytes=1 * MB, seed=99))
+        fut = mrm.prefetch(key, tier="host")  # legacy call: no ctx
+        fut.result()
+        assert not fut.suppressed
+        assert mrm.metrics["prefetch_suppressed"] == 0
+        for h in handles:
+            mrm.close(h)
+
+
+# ----------------------------------------------------- scatter regressions
+class TestScatterRegressions:
+    def test_unknown_node_rejected_up_front(self, tmp_path, objstore):
+        """[bugfix] a bad name used to KeyError mid-loop, leaving the
+        shards already placed published; now it rejects before placing."""
+        key = ModelKey("jax", "m", "1")
+        cluster = _cluster(tmp_path, objstore, n=2, populate=[(key, 0)])
+        with pytest.raises(KeyError, match="unknown node"):
+            cluster.scatter(key, node_names=["node0", "nope"])
+        for name in ("node0", "node1"):
+            assert cluster.node(name).local_shards(key) == []
+            assert cluster.directory.shards_on(key, name) == []
+
+    def test_midscatter_failure_rolls_back(self, tmp_path, objstore,
+                                           monkeypatch):
+        """[bugfix] a store_shard failure partway through withdraws the
+        placements already published — no phantom holders."""
+        key = ModelKey("jax", "m", "1")
+        cluster = _cluster(tmp_path, objstore, n=2, populate=[(key, 0)])
+        n_shards = len(objstore.shard_table(key))
+        assert n_shards >= 3
+        victim = cluster.node("node1")
+        real = victim.store_shard
+        calls = {"n": 0}
+
+        def flaky(key, index, data):
+            calls["n"] += 1
+            if calls["n"] == 2:
+                raise OSError("disk full")
+            return real(key, index, data)
+
+        monkeypatch.setattr(victim, "store_shard", flaky)
+        with pytest.raises(OSError):
+            cluster.scatter(key, node_names=["node1"])
+        assert victim.local_shards(key) == []
+        assert cluster.directory.shards_on(key, "node1") == []
+        assert all(cluster.directory.shard_holders(key, i) == []
+                   for i in range(n_shards))
+
+    def test_successful_scatter_unchanged(self, tmp_path, objstore):
+        key = ModelKey("jax", "m", "1")
+        cluster = _cluster(tmp_path, objstore, n=2, populate=[(key, 0)])
+        out = cluster.scatter(key)
+        n_shards = len(objstore.shard_table(key))
+        assert sum(len(v) for v in out.values()) == n_shards
+        assert sorted(cluster.directory.shard_keys()) == [key]
+
+
+# --------------------------------------------------- predictor regressions
+class TestPredictorRegressions:
+    def test_oneshot_flood_cannot_flush_live_streams(self):
+        """[bugfix] cap-eviction used to take the stalest record outright,
+        so a scan flood of never-returning keys flushed established gap
+        history; one-shot records must go first."""
+        p = NextUsePredictor(clock=lambda: 0.0, max_keys=8)
+        hot = ModelKey("jax", "hot", "1")
+        for t in (0.0, 1.0, 2.0, 3.0):  # an established stream, oldest
+            p.record(hot, now=t)
+        for i in range(50):             # newer one-shot scan keys
+            p.record(ModelKey("jax", f"scan{i}", "1"), now=10.0 + i)
+        st = p.stats()
+        assert st["keys"] == 8
+        assert st["evicted_streams"] == 0
+        # the stream survived with its gap history intact
+        assert p.predict_next_use_s(hot, now=3.0) == pytest.approx(1.0,
+                                                                   rel=0.3)
+
+    def test_stream_eviction_counted_when_unavoidable(self):
+        p = NextUsePredictor(clock=lambda: 0.0, max_keys=4)
+        for i in range(5):  # every record is a real stream: one must go
+            k = ModelKey("jax", f"s{i}", "1")
+            p.record(k, now=float(i))
+            p.record(k, now=float(i) + 0.5)
+        st = p.stats()
+        assert st["keys"] == 4
+        assert st["evicted_streams"] == 1
+
+    def test_drop_model_forgets_predictor_stream(self, tmp_path):
+        disk = DiskStore(str(tmp_path / "disk"))
+        key = ModelKey("jax", "m", "1")
+        disk.put(key, _tensors(nbytes=1 * MB))
+        mrm = _mrm(disk, policy="slo")
+        mrm.close(mrm.open(key))
+        assert mrm.slo.predictor.stats()["keys"] >= 1
+        out = mrm.drop_model(key)
+        assert out["host"] or out["device"]
+        assert mrm.host.peek(key) is None and mrm.device.peek(key) is None
+        # history gone: the predictor no longer knows the key at all
+        assert mrm.slo.predictor.predict_next_use_s(key) is None
+        assert disk.contains(key)            # from_disk=False keeps the file
+
+    def test_drop_model_skips_inuse_copies(self, tmp_path):
+        disk = DiskStore(str(tmp_path / "disk"))
+        key = ModelKey("jax", "m", "1")
+        disk.put(key, _tensors(nbytes=1 * MB))
+        mrm = _mrm(disk)
+        h = mrm.open(key)
+        out = mrm.drop_model(key)
+        # the in-use device copy stays (and blocks the disk delete); the
+        # idle host copy is fair game
+        assert out["busy"] and not out["device"] and out["host"]
+        assert mrm.device.peek(key) is not None
+        mrm.close(h)
+        out = mrm.drop_model(key, from_disk=True)
+        assert out["device"] and out["disk"] and not out["busy"]
+        assert not disk.contains(key)
